@@ -1,0 +1,91 @@
+"""Roofline table: aggregate dry-run artifacts into the §Roofline report.
+
+Reads benchmarks/artifacts/dryrun/*.json (written by repro.launch.dryrun)
+and prints, per (arch x shape x mesh): the three terms in seconds, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and a one-line "what would move
+the dominant term" note.  Markdown output feeds EXPERIMENTS.md directly.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+_ADVICE = {
+    "compute": "raise MXU utilization: larger microbatch tiles / fuse "
+               "unpack into the matmul (rbmm_mxu kernel)",
+    "memory": "cut HBM traffic: keep operands packed (32x), fuse Eq.10 "
+              "binarize so integer activations never round-trip",
+    "collective": "reshard: move DP grads to reduce-scatter+all-gather, "
+                  "1-bit grad compression, overlap via async collectives",
+}
+
+
+def load_rows(pattern: str = "*.json", art_dir: str = ART_DIR
+              ) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, pattern))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r: Dict) -> str:
+    if r.get("status") == "SKIP":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP — "
+                f"{r['reason']} | | | | | |")
+    if r.get("status") != "OK":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL — "
+                f"{r.get('error', '?')[:60]} | | | | | |")
+    t = r["roofline"]
+    return ("| {arch} | {shape} | {mesh} | {imp} | {c:.3e} | {m:.3e} | "
+            "{co:.3e} | {dom} | {ur:.2f} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        imp=r.get("impl", "?"), c=t["compute_s"], m=t["memory_s"],
+        co=t["collective_s"], dom=t["dominant"], ur=t["useful_ratio"])
+
+
+def print_table(rows: List[Dict], tag: str = "") -> None:
+    rows = [r for r in rows if r.get("tag", "") == tag]
+    print("| arch | shape | mesh | impl | compute_s | memory_s | "
+          "collective_s | dominant | useful |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    for r in rows:
+        print(fmt_row(r))
+    ok = sum(r.get("status") == "OK" for r in rows)
+    skip = sum(r.get("status") == "SKIP" for r in rows)
+    fail = sum(r.get("status") == "FAIL" for r in rows)
+    print(f"\nOK {ok} | SKIP {skip} | FAIL {fail}")
+    # bottleneck advice per dominant class present
+    doms = {r["roofline"]["dominant"] for r in rows
+            if r.get("status") == "OK"}
+    for d in sorted(doms):
+        print(f"- dominant={d}: {_ADVICE[d]}")
+
+
+def run(verbose: bool = True):
+    rows = load_rows()
+    if verbose:
+        print_table(rows)
+    return [(f"{r['arch']}__{r['shape']}__{r['mesh']}", 0.0,
+             r["roofline"]["step_time_s"] if r.get("status") == "OK" else -1)
+            for r in rows if not r.get("tag")]
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--tag", default="")
+    p.add_argument("--dir", default=ART_DIR)
+    args = p.parse_args()
+    print_table(load_rows(art_dir=args.dir), tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

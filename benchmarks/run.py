@@ -1,0 +1,57 @@
+"""Benchmark entrypoint — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows for every benchmark:
+  * Table I  — accuracy pipeline proxy (BiT -> SPS search -> fine-tune)
+  * Table II — RBMM engine throughput across execution paths
+  * Table V  — per-optimization ablations
+  * Roofline — per-(arch x shape x mesh) projected step time from the
+               dry-run artifacts (runs only if artifacts exist)
+
+``python -m benchmarks.run [--fast]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--fast", action="store_true",
+                   help="reduced steps for CI")
+    p.add_argument("--skip-table1", action="store_true")
+    args = p.parse_args()
+
+    rows = []
+    print("name,us_per_call,derived")
+
+    from benchmarks import table2_throughput
+    for n, us, d in table2_throughput.run(verbose=False):
+        rows.append((f"table2/{n}", us, d))
+        print(f"table2/{n},{us:.1f},{d:.1f}")
+
+    from benchmarks import table5_ablation
+    for n, us, d in table5_ablation.run(verbose=False):
+        rows.append((f"table5/{n}", us, d))
+        print(f"table5/{n},{us:.1f},{d:.3f}")
+
+    if not args.skip_table1:
+        from benchmarks import table1_accuracy
+        steps = 60 if args.fast else 200
+        ft = 30 if args.fast else 100
+        out = table1_accuracy.run(steps=steps, ft_steps=ft, verbose=False)
+        for k, v in out.items():
+            print(f"table1/{k},0.0,{v:.4f}")
+
+    try:
+        from benchmarks import roofline_table
+        for n, us, d in roofline_table.run(verbose=False):
+            print(f"roofline/{n},{us:.1f},{d:.6f}")
+    except Exception:  # artifacts may not exist yet
+        traceback.print_exc()
+        print("roofline/unavailable,0.0,-1")
+
+
+if __name__ == "__main__":
+    main()

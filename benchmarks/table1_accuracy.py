@@ -1,0 +1,178 @@
+"""Table I proxy: the paper's algorithm pipeline, end to end, on a reduced
+BERT + synthetic data (no GLUE offline):
+
+  1. train the BiT-style student (softmax + elastic binarization attention),
+  2. grid-search SPS thresholds per granularity on a 10% calibration set
+     (Eq. 5/6) against the BiT attention probs,
+  3. install lambda*, fine-tune with thresholds frozen,
+  4. report: BiT loss vs COBRA-SPS loss (relative perf, the Table I column),
+     per-granularity CDR + search cost, and the Fig. 3 similarity metrics.
+
+Run directly for the full pipeline, or via benchmarks.run with small steps.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base
+from repro.core import sps as sps_lib
+from repro.data.synthetic import SyntheticStream
+from repro.launch import mesh as mesh_lib
+from repro.models.attention import SPSAttention
+from repro.models.blocks import Block
+from repro.models.lm import build_model
+from repro.optim.adamw import AdamW
+from repro.optim.schedules import warmup_cosine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _train(cfg, steps, seed=0, init_params=None, lr=1e-3):
+    model = build_model(cfg)
+    mesh = mesh_lib.make_host_mesh()
+    tr = Trainer(model, AdamW(lr=lr, grad_clip=0.5,
+                              schedule=warmup_cosine(steps // 8 + 1, steps)),
+                 mesh, TrainerConfig(seed=seed))
+    stream = SyntheticStream(cfg, seq_len=64, global_batch=16, seed=seed)
+    state = tr.init_state()
+    if init_params is not None:
+        state = state._replace(params=init_params)
+    else:
+        # BiT's elastic prob scale: at random init softmax mass ~ 1/L, so a
+        # 0.5 alpha would zero every attention prob and starve the search
+        params = dict(state.params)
+        blocks = dict(params["blocks"])
+        attn = dict(blocks["attn"])
+        attn["bit_alpha"] = 0.1 * jnp.ones_like(attn["bit_alpha"])
+        blocks["attn"] = attn
+        params["blocks"] = blocks
+        state = state._replace(params=params)
+    losses = []
+    for step in range(steps):
+        state, m = tr.train_step(state, stream.batch_at(step))
+        losses.append(float(m["loss"]))
+    return model, state.params, losses
+
+
+def _eval_loss(model, params, cfg, n_batches=8, seed=999):
+    stream = SyntheticStream(cfg, seq_len=64, global_batch=16, seed=seed)
+    tot = 0.0
+    for i in range(n_batches):
+        loss, m = jax.jit(model.train_loss)(params, stream.batch_at(i))
+        tot += float(m["loss"])
+    return tot / n_batches
+
+
+def _collect_layer_scores(cfg, model, params, batches):
+    """Per-layer (z, bit_probs) from the BiT-mode forward."""
+    blk = Block(cfg, kind="attn")
+    attn_t = blk._parts()["attn"]
+    assert attn_t.attn_mode == "bit_softmax"
+    out_layers = None
+    for batch in batches:
+        x = model._embed_tokens(params, jnp.asarray(batch["tokens"]), None)
+        layers = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[i], params["blocks"])
+            _, aux = attn_t.qat(lp["attn"], x, collect_scores=True)
+            layers.append((aux["scores"], aux["probs"]))
+            x, _ = blk.qat(lp, x)
+        if out_layers is None:
+            out_layers = [[zs, ps] for zs, ps in layers]
+        else:
+            for i, (zs, ps) in enumerate(layers):
+                out_layers[i][0] = jnp.concatenate([out_layers[i][0], zs])
+                out_layers[i][1] = jnp.concatenate([out_layers[i][1], ps])
+    return out_layers
+
+
+def run(steps: int = 200, ft_steps: int = 100, verbose: bool = True
+        ) -> Dict[str, float]:
+    t_start = time.time()
+    base_cfg = base.get_smoke_config("bert-base-cobra").with_(
+        num_layers=2, causal=True)  # causal LM proxy task
+
+    # --- stage 1: BiT student (softmax + elastic binarization attention)
+    bit_cfg = base_cfg.with_(binary=dataclasses.replace(
+        base_cfg.binary, attn_mode="bit_softmax"))
+    bit_model, bit_params, bit_losses = _train(bit_cfg, steps)
+    bit_loss = _eval_loss(bit_model, bit_params, bit_cfg)
+
+    # --- stage 2: SPS threshold search per granularity (10% calibration)
+    stream = SyntheticStream(bit_cfg, seq_len=64, global_batch=16, seed=0)
+    from repro.data.calib import calibration_set
+    calib = calibration_set(stream, fraction=0.1, pool_batches=20)
+    layers = _collect_layer_scores(bit_cfg, bit_model, bit_params, calib)
+
+    gran_results = {}
+    for gran in ("layer", "head", "row"):
+        t0 = time.time()
+        lams, cdrs = [], []
+        for z, probs in layers:
+            lam, c = sps_lib.search_thresholds(z, probs, granularity=gran)
+            lams.append(lam)
+            cdrs.append(float(jnp.mean(c)))
+        gran_results[gran] = {"cdr": float(np.mean(cdrs)),
+                              "search_s": time.time() - t0}
+    if verbose:
+        for g, r in gran_results.items():
+            print(f"granularity={g:6s} CDR={r['cdr']:.4f} "
+                  f"search={r['search_s']:.2f}s")
+
+    # --- stage 3: install head-wise lambda*, freeze, fine-tune
+    head_lams = []
+    for z, probs in layers:
+        lam, _ = sps_lib.search_thresholds(z, probs, granularity="head")
+        head_lams.append(lam)
+    sps_cfg = base_cfg  # attn_mode = "sps"
+    sps_params = jax.tree.map(lambda x: x, bit_params)
+    blocks = dict(sps_params["blocks"])
+    attn_p = dict(blocks["attn"])
+    attn_p["sps_lambda"] = jnp.stack(head_lams)
+    blocks["attn"] = attn_p
+    sps_params["blocks"] = blocks
+
+    sps_model = build_model(sps_cfg)
+    sps_loss_pre = _eval_loss(sps_model, sps_params, sps_cfg)
+    _, sps_params_ft, _ = _train(sps_cfg, ft_steps, init_params=sps_params,
+                                 lr=3e-4)
+    sps_loss_ft = _eval_loss(sps_model, sps_params_ft, sps_cfg)
+
+    # --- Fig. 3 similarity on the last layer
+    z, probs_teacher = layers[-1]
+    sps_probs = sps_lib.sps(z, head_lams[-1][None, :, None, None])
+    sim = sps_lib.similarity_report(probs_teacher, sps_probs)
+
+    rel = bit_loss / max(sps_loss_ft, 1e-9)
+    out = {
+        "bit_eval_loss": bit_loss,
+        "sps_eval_loss_pre_ft": sps_loss_pre,
+        "sps_eval_loss_post_ft": sps_loss_ft,
+        "relative_perf_proxy": rel,
+        "cosine": sim["cosine"], "pearson": sim["pearson"],
+        **{f"cdr_{g}": r["cdr"] for g, r in gran_results.items()},
+        **{f"search_s_{g}": r["search_s"] for g, r in gran_results.items()},
+        "total_s": time.time() - t_start,
+    }
+    if verbose:
+        print(json.dumps(out, indent=1))
+    return out
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--ft-steps", type=int, default=100)
+    args = p.parse_args()
+    run(args.steps, args.ft_steps)
+
+
+if __name__ == "__main__":
+    main()

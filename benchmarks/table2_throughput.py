@@ -1,0 +1,102 @@
+"""Table II proxy: RBMM engine throughput across execution paths.
+
+The paper reports GOPS on FPGA; the runtime here is a CPU host, so absolute
+numbers are *relative* evidence (popcount vs unpacked vs fp baselines on the
+same machine), while the TPU projection comes from the dry-run roofline
+artifacts (benchmarks.roofline_table).  Shapes follow the paper's BERT-base
+workload: l=512, d=768, FF=3072.
+
+Each row: name, us_per_call, derived GOPS (2*M*K*N binary MACs per matmul).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing, rbmm
+
+
+def _time(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_rbmm(m: int = 512, k: int = 768, p: int = 768
+               ) -> List[Tuple[str, float, float]]:
+    rng = np.random.default_rng(0)
+    a = rng.choice([-1, 1], size=(m, k)).astype(np.float32)
+    b = rng.choice([-1, 1], size=(p, k)).astype(np.float32)
+    ap = packing.pack_signs(jnp.asarray(a))
+    bp = packing.pack_signs(jnp.asarray(b))
+    af = jnp.asarray(a)
+    bf = jnp.asarray(b)
+    a16 = af.astype(jnp.bfloat16)
+    b16 = bf.astype(jnp.bfloat16)
+    ops = 2.0 * m * k * p
+
+    rows = []
+
+    pop = jax.jit(lambda x, y: rbmm.rbmm_int(x, y, k, impl="popcount"))
+    us = _time(pop, ap, bp)
+    rows.append((f"rbmm_popcount_{m}x{k}x{p}", us, ops / us / 1e3))
+
+    mxu = jax.jit(lambda x, y: rbmm.rbmm_int(x, y, k, impl="mxu"))
+    us = _time(mxu, ap, bp)
+    rows.append((f"rbmm_unpack_matmul_{m}x{k}x{p}", us, ops / us / 1e3))
+
+    f32 = jax.jit(lambda x, y: x @ y.T)
+    us = _time(f32, af, bf)
+    rows.append((f"matmul_f32_{m}x{k}x{p}", us, ops / us / 1e3))
+
+    bf16 = jax.jit(lambda x, y: jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32))
+    us = _time(bf16, a16, b16)
+    rows.append((f"matmul_bf16_{m}x{k}x{p}", us, ops / us / 1e3))
+
+    # quantization-fused (Eq. 10): integer out replaced by packed bits out
+    theta = jnp.zeros((p,), jnp.int32)
+    fused = jax.jit(lambda x, y: rbmm.rbmm_binary(x, y, k, theta)[0])
+    us = _time(fused, ap, bp)
+    rows.append((f"rbmm_fused_binarize_{m}x{k}x{p}", us, ops / us / 1e3))
+    return rows
+
+
+def bench_memory_footprint() -> List[Tuple[str, float, float]]:
+    """Weight bytes per layer: packed vs bf16 vs f32 (the bandwidth story)."""
+    d, ff = 768, 3072
+    n = d * ff
+    return [("w1_bytes_packed", 0.0, n / 8),
+            ("w1_bytes_bf16", 0.0, n * 2),
+            ("w1_bytes_f32", 0.0, n * 4)]
+
+
+def run(verbose: bool = True) -> List[Tuple[str, float, float]]:
+    rows = []
+    for m, k, p in ((512, 768, 768), (512, 768, 3072), (128, 3072, 768)):
+        rows += bench_rbmm(m, k, p)
+    rows += bench_memory_footprint()
+    if verbose:
+        print("name,us_per_call,derived")
+        for n, us, d in rows:
+            print(f"{n},{us:.1f},{d:.1f}")
+    return rows
+
+
+def main():
+    argparse.ArgumentParser().parse_args()
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Table V proxy: impact of each proposed optimization, measured as wall
+time of the jit'd op on this host (direction + ratio, not FPGA LUTs):
+
+  1. SPS vs softmax attention        (paper: 564x throughput)
+  2. fused Eq. 10 binarize vs unfused int->binarize->pack
+  3. popcount vs unpack+matmul vs fp baseline (execution-path ablation)
+  4. Eq. 11 blocked FFN vs unblocked (the two-buffer schedule)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing, rbmm, sps
+from repro.models.attention import SPSAttention
+from repro.models.ffn import BinaryFFN
+
+
+def _time(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def ablate_sps_vs_softmax(l: int = 512, d: int = 256, h: int = 4
+                          ) -> List[Tuple[str, float, float]]:
+    kw = dict(d_model=d, num_heads=h, num_kv_heads=h, head_dim=d // h,
+              use_rope=False)
+    attn_sps = SPSAttention(attn_mode="sps", **kw)
+    attn_sm = SPSAttention(attn_mode="bit_softmax", **kw)
+    params = attn_sps.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=(2, l, d)).astype(np.float32))
+    f_sps = jax.jit(lambda p, t: attn_sps.qat(p, t)[0])
+    f_sm = jax.jit(lambda p, t: attn_sm.qat(p, t)[0])
+    us_sps = _time(f_sps, params, x)
+    us_sm = _time(f_sm, params, x)
+    return [("attn_sps", us_sps, us_sm / us_sps),
+            ("attn_softmax_bit", us_sm, 1.0)]
+
+
+def ablate_fusion(m: int = 512, k: int = 768, p: int = 3072
+                  ) -> List[Tuple[str, float, float]]:
+    rng = np.random.default_rng(0)
+    ap = packing.pack_signs(jnp.asarray(
+        rng.choice([-1, 1], size=(m, k)).astype(np.float32)))
+    bp = packing.pack_signs(jnp.asarray(
+        rng.choice([-1, 1], size=(p, k)).astype(np.float32)))
+    theta = jnp.zeros((p,), jnp.int32)
+
+    fused = jax.jit(lambda a, b: rbmm.rbmm_binary(a, b, k, theta)[0])
+
+    def unfused(a, b):
+        c = rbmm.rbmm_int(a, b, k)
+        return packing.pack_bits((c >= theta).astype(jnp.uint32))
+
+    unf = jax.jit(unfused)
+    us_f = _time(fused, ap, bp)
+    us_u = _time(unf, ap, bp)
+    return [("rbmm_fused_eq10", us_f, us_u / us_f),
+            ("rbmm_unfused", us_u, 1.0)]
+
+
+def ablate_impls(m: int = 512, k: int = 3072, p: int = 768
+                 ) -> List[Tuple[str, float, float]]:
+    rng = np.random.default_rng(0)
+    a = rng.choice([-1, 1], size=(m, k)).astype(np.float32)
+    b = rng.choice([-1, 1], size=(p, k)).astype(np.float32)
+    ap, bp = packing.pack_signs(jnp.asarray(a)), \
+        packing.pack_signs(jnp.asarray(b))
+    rows = []
+    base_us = None
+    for impl in ("popcount", "mxu", "dense"):
+        if impl == "dense":
+            f = jax.jit(lambda: jnp.asarray(a) @ jnp.asarray(b).T)
+            us = _time(f)
+        else:
+            f = jax.jit(lambda x, y, i=impl: rbmm.rbmm_int(x, y, k, impl=i))
+            us = _time(f, ap, bp)
+        base_us = base_us or us
+        rows.append((f"rbmm_impl_{impl}", us, base_us / us))
+    return rows
+
+
+def ablate_blocked_ffn(m: int = 256, d: int = 768
+                       ) -> List[Tuple[str, float, float]]:
+    ff = 4 * d
+    f_blk = BinaryFFN(d_model=d, d_ff=ff, act="relu", glu=False, blocked_r=4)
+    f_ref = BinaryFFN(d_model=d, d_ff=ff, act="relu", glu=False)
+    params = f_blk.init(jax.random.PRNGKey(0))
+    dparams = f_blk.convert(params)
+    x = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=(m, d)).astype(np.float32))
+    fb = jax.jit(lambda p, t: f_blk.apply_deploy(p, t))
+    fr = jax.jit(lambda p, t: f_ref.apply_deploy(p, t))
+    us_b = _time(fb, dparams, x)
+    us_r = _time(fr, dparams, x)
+    return [("ffn_blocked_eq11", us_b, us_r / us_b),
+            ("ffn_unblocked", us_r, 1.0)]
+
+
+def run(verbose: bool = True) -> List[Tuple[str, float, float]]:
+    rows = (ablate_sps_vs_softmax() + ablate_fusion() + ablate_impls() +
+            ablate_blocked_ffn())
+    if verbose:
+        print("name,us_per_call,derived")
+        for n, us, d in rows:
+            print(f"{n},{us:.1f},{d:.3f}")
+    return rows
+
+
+def main():
+    argparse.ArgumentParser().parse_args()
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Batched binary-cache serving demo across architecture families.
+
+Prefills a batch of prompts and streams greedy decode steps through the
+fully binary KV path (K packed along d_h, V^T packed along the sequence,
+probs packed in flight), reporting tokens/s and the cache-memory win.
+
+Run:  PYTHONPATH=src python examples/serve_engine.py \
+          [--arch smollm-135m|mixtral-8x22b|hymba-1.5b|xlstm-350m]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import base
+from repro.models.lm import build_model
+from repro.serve.engine import ServeConfig, ServeEngine
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="smollm-135m",
+                   choices=[a for a in base.ARCH_IDS
+                            if not base.get_config(a).skip_decode])
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=12)
+    p.add_argument("--new-tokens", type=int, default=24)
+    args = p.parse_args()
+
+    cfg = base.get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dparams = model.convert(params)
+    eng = ServeEngine(model, dparams, ServeConfig(
+        max_len=args.prompt_len + args.new_tokens + cfg.frontend_tokens + 8))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    kw = {}
+    if cfg.frontend_tokens:
+        kw["frontend_embeds"] = rng.standard_normal(
+            (args.batch, cfg.frontend_tokens, model.frontend_dim),
+            dtype=np.float32)
+
+    ticks = []
+    t0 = time.perf_counter()
+    out, report = eng.generate(
+        prompts, max_new_tokens=args.new_tokens,
+        stream_cb=lambda t, tok: ticks.append(time.perf_counter()), **kw)
+    total = time.perf_counter() - t0
+    print(f"[{cfg.name}] {args.batch} x {args.new_tokens} tokens "
+          f"in {total:.2f}s ({args.batch * args.new_tokens / total:.1f} "
+          f"tok/s; first token {ticks[0] - t0:.2f}s)")
+    print(f"binary KV cache: {report['total_bytes']:.0f} B total, "
+          f"{report['compression_vs_bf16']:.1f}x smaller than bf16 caches")
+    for i in range(min(2, args.batch)):
+        print(f"  seq {i}: {out[i, :12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""COBRA on TPU: binary-transformer training & inference framework in JAX.
+
+Public API (see README.md for the tour):
+
+    from repro import configs, models
+    cfg     = configs.get_config("mixtral-8x22b")
+    model   = models.build_model(cfg)
+    params  = model.init(jax.random.PRNGKey(0))
+    dparams = model.convert(params)           # pack to 1 bit/weight
+
+Core paper primitives live in ``repro.core`` (rbmm, sps, binarize, packing);
+Pallas TPU kernels in ``repro.kernels``; launchers (mesh, dry-run, roofline)
+in ``repro.launch``.
+
+Intentionally import-light: nothing here may touch jax device state
+(the dry-run contract).  Submodules import on demand.
+"""
+
+__version__ = "1.0.0"

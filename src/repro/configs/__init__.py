@@ -1,0 +1,9 @@
+"""Config registry: ``get_config(arch_id)`` / ``get_smoke_config(arch_id)``."""
+from repro.configs.base import (ARCH_IDS, SHAPES, BinaryConfig, MeshConfig,
+                                ModelConfig, MoEConfig, ShapeConfig,
+                                SSMConfig, all_configs, get_config,
+                                get_smoke_config, valid_shapes)
+
+__all__ = ["ARCH_IDS", "SHAPES", "BinaryConfig", "MeshConfig", "ModelConfig",
+           "MoEConfig", "ShapeConfig", "SSMConfig", "all_configs",
+           "get_config", "get_smoke_config", "valid_shapes"]

@@ -1,0 +1,5 @@
+"""The paper's primitives: RBMM (Eq. 7/8), SPS (Eq. 3-6), binarization +
+fused thresholds (Eq. 9/10), bit-packing datapacks."""
+from repro.core import binarize, packing, rbmm, sps
+
+__all__ = ["binarize", "packing", "rbmm", "sps"]

@@ -1,0 +1,139 @@
+"""Binarization functions (BiT-style) + the paper's fused integer thresholds.
+
+Two quantization schemes (paper Eq. 9):
+  signed   {-1,+1}:  x_b = sign((x - beta) / alpha)          (weights, Q/K/V acts)
+  unsigned {0, 1}:   x_b = clip(round((x - beta)/alpha),0,1) (post-ReLU acts,
+                                                              attention probs)
+
+Training uses latent full-precision tensors with straight-through estimators
+(STE); deployment folds (alpha, beta) into a single integer threshold theta
+per output channel (Eq. 10), which `repro.core.rbmm` consumes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# STE primitives
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _sign_ste(x):
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _sign_ste_fwd(x):
+    return _sign_ste(x), x
+
+
+def _sign_ste_bwd(x, g):
+    # clipped STE: gradient passes only where |x| <= 1 (BinaryConnect/BiT)
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+_sign_ste.defvjp(_sign_ste_fwd, _sign_ste_bwd)
+
+
+@jax.custom_vjp
+def _round_ste(x):
+    # round-half-UP (not banker's): keeps the Eq. 10 threshold fusion exact
+    # at integer-derived values that land exactly on .5 boundaries.
+    return jnp.floor(x + 0.5)
+
+
+_round_ste.defvjp(lambda x: (jnp.floor(x + 0.5), None), lambda _, g: (g,))
+
+
+def sign_ste(x: jax.Array) -> jax.Array:
+    """sign with straight-through gradient; sign(0) := +1 (paper)."""
+    return _sign_ste(x)
+
+
+def round_ste(x: jax.Array) -> jax.Array:
+    return _round_ste(x)
+
+
+# ---------------------------------------------------------------------------
+# Weight binarization (signed scheme, per-output-channel scale)
+# ---------------------------------------------------------------------------
+
+
+def binarize_weight(w: jax.Array, alpha: jax.Array | None = None,
+                    axis: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """W ~= alpha * sign(W).  alpha: per-output-channel mean(|w|) reduced over
+    the contraction axis `axis` (BiT init; callers may pass a learnable alpha).
+    Returns (w_binary_pm1, alpha)."""
+    if alpha is None:
+        alpha = jnp.mean(jnp.abs(w), axis=axis, keepdims=True)
+    wb = sign_ste(w)
+    return wb, alpha
+
+
+def init_weight_scale(w: jax.Array, axis: int = 0) -> jax.Array:
+    return jnp.mean(jnp.abs(w), axis=axis, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Activation binarization (elastic, learnable alpha/beta — BiT Eq. 2 analogue)
+# ---------------------------------------------------------------------------
+
+
+def binarize_act_signed(x: jax.Array, alpha: jax.Array,
+                        beta: jax.Array) -> jax.Array:
+    """{-1,+1} elastic binarization with STE; output is alpha * sign(..)."""
+    xb = sign_ste((x - beta) / jnp.maximum(alpha, 1e-6))
+    return alpha * xb
+
+
+def binarize_act_unsigned(x: jax.Array, alpha: jax.Array,
+                          beta: jax.Array) -> jax.Array:
+    """{0,1} elastic binarization: alpha * clip(round((x-beta)/alpha), 0, 1)."""
+    z = (x - beta) / jnp.maximum(alpha, 1e-6)
+    zb = jnp.clip(round_ste(z), 0.0, 1.0)
+    return alpha * zb
+
+
+def bits_signed(x: jax.Array, alpha: jax.Array | float = 1.0,
+                beta: jax.Array | float = 0.0) -> jax.Array:
+    """Hard {0,1}-encoded bits of the signed scheme (bit = x-beta >= 0)."""
+    return ((x - beta) >= 0).astype(jnp.uint32)
+
+
+def bits_unsigned(x: jax.Array, alpha: jax.Array | float,
+                  beta: jax.Array | float = 0.0) -> jax.Array:
+    """Hard bits of the unsigned scheme: clip(round_half_up((x-b)/a),0,1)
+    == (x >= beta + alpha/2)."""
+    a = jnp.maximum(jnp.asarray(alpha, x.dtype), 1e-6)
+    return (x >= jnp.asarray(beta, x.dtype) + 0.5 * a).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Fused integer thresholds (paper Eq. 10)
+# ---------------------------------------------------------------------------
+
+
+def fused_threshold(alpha: jax.Array, beta: jax.Array,
+                    scheme: str, relu: bool = False) -> jax.Array:
+    """theta_j such that binarize(c_j) == (c_j >= theta_j) on integer RBMM
+    outputs c.  signed: theta = beta.  unsigned: theta = round(alpha/2 + beta);
+    with a preceding ReLU, theta = max(0, round(alpha/2 + beta)) (paper merges
+    the two comparisons since they overlap)."""
+    if scheme == "signed":
+        theta = beta
+    elif scheme == "unsigned":
+        theta = jnp.round(0.5 * alpha + beta)
+        if relu:
+            theta = jnp.maximum(theta, 0.0)
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return theta
+
+
+def apply_threshold(c: jax.Array, theta: jax.Array) -> jax.Array:
+    """Binarize integer matmul output with the fused threshold -> {0,1} bits."""
+    return (c >= theta).astype(jnp.uint32)

@@ -1,0 +1,86 @@
+"""Bit-packing along the contraction dimension (the paper's "datapacks").
+
+The paper packs binary values into N-bit datapacks (N=768 on the FPGA).  On
+TPU the natural word is the 32-bit VPU lane, so we pack 32 binary values into
+one ``uint32`` along the *last* axis.  Encoding (paper §III-B1): "+1" -> bit 1,
+"-1" -> bit 0, and for the unsigned {0,1} scheme "0" -> bit 0 (the don't-care
+count recovers correctness).
+
+Padding convention for K % 32 != 0 (all assigned archs have K % 32 == 0 but
+the library does not rely on it): EVERY operand pads with 0 (the pack_bits
+default).  Consumers correct in-formula:
+  * XNOR scheme: each pad bit contributes XNOR(0,0)=1 to the popcount — a
+    static constant, folded into the Eq. 7 ``-K`` term
+    (``c = 2*pc - (K + 2*pad)``).
+  * AND scheme: pad contribution is 0; the don't-care count is computed
+    over the *true* K region (``dc_count`` does).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+WORD = 32
+_POWS = (1 << np.arange(WORD, dtype=np.uint64)).astype(np.uint32)  # LSB-first
+
+
+def packed_len(k: int) -> int:
+    return (k + WORD - 1) // WORD
+
+
+def pack_bits(bits: jax.Array, *, pad_value: int = 0) -> jax.Array:
+    """Pack a {0,1} array along the last axis into uint32 words (LSB-first).
+
+    bits: (..., K) any integer/bool/float dtype holding exactly {0,1}.
+    returns (..., ceil(K/32)) uint32.
+    """
+    k = bits.shape[-1]
+    kp = packed_len(k)
+    pad = kp * WORD - k
+    b = bits.astype(jnp.uint32)
+    if pad:
+        fill = jnp.full(bits.shape[:-1] + (pad,), pad_value, dtype=jnp.uint32)
+        b = jnp.concatenate([b, fill], axis=-1)
+    b = b.reshape(bits.shape[:-1] + (kp, WORD))
+    return (b * jnp.asarray(_POWS)).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(packed: jax.Array, k: int) -> jax.Array:
+    """Inverse of pack_bits -> (..., k) int32 in {0,1}."""
+    kp = packed.shape[-1]
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(packed.shape[:-1] + (kp * WORD,))
+    return bits[..., :k].astype(jnp.int32)
+
+
+def pack_signs(x: jax.Array) -> jax.Array:
+    """{-1,+1}-scheme packing of a real array: bit = (x >= 0).
+
+    Paper: "the sign of zero is deemed as 1"."""
+    return pack_bits((x >= 0).astype(jnp.uint32))
+
+
+def pack_unsigned(x: jax.Array) -> jax.Array:
+    """{0,1}-scheme packing: bit = (x > 0) for an array already in {0,1}."""
+    return pack_bits((x > 0).astype(jnp.uint32))
+
+
+def unpack_signs(packed: jax.Array, k: int, dtype=jnp.float32) -> jax.Array:
+    """Unpack to ±1 values (bit 1 -> +1, bit 0 -> -1)."""
+    bits = unpack_bits(packed, k)
+    return (2 * bits - 1).astype(dtype)
+
+
+def dc_count(packed: jax.Array, k: int) -> jax.Array:
+    """Don't-care count delta_m: number of 0s in the *true* K region of a
+    {0,1}-scheme datapack (Eq. 7, second case).  Pad bits are 0 by the A-pad
+    convention, so delta = K - popcount(words) only when K % 32 == 0;
+    otherwise we subtract the pad zeros explicitly."""
+    pc = jax.lax.population_count(packed).astype(jnp.int32).sum(axis=-1)
+    return jnp.int32(k) - pc
+
+
+def popcount_words(packed: jax.Array) -> jax.Array:
+    return jax.lax.population_count(packed).astype(jnp.int32)

@@ -1,0 +1,194 @@
+"""SPS — Shifted Polarized Softmax (paper §III-A) + threshold search.
+
+SPS replaces ``binarize(softmax(QK^T/sqrt(d_h)))`` with a direct polarization
+
+    SPS(z) = 1[z >= lambda_{i,k}]          (Eq. 3/4)
+
+with per-layer / per-head (default) / per-row thresholds lambda found by grid
+search over [0, 1] (granularity 0.05) minimizing the Channel Distortion Rate
+(MSE, Eq. 5/6) against the BiT softmax+elastic-binarization attention on a
+small calibration set, then fixed while weights fine-tune.
+
+Integer-domain folding: with binarized Q, K (scales alpha_q, alpha_k) the
+real-valued condition  z = alpha_q*alpha_k*c / sqrt(d_h) >= lambda  on the
+integer RBMM accumulator c becomes  c >= theta,
+theta = ceil(lambda * sqrt(d_h) / (alpha_q * alpha_k)) — one integer compare,
+which is what the RBMM engine's M2 mode consumes (the paper folds the same
+constant into its threshold/data-width port).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+GRID_STEP = 0.05
+DEFAULT_GRID = jnp.arange(0.0, 1.0 + 1e-9, GRID_STEP)  # 21 values, Eq. 6
+GRANULARITIES = ("layer", "head", "row")
+
+
+# ---------------------------------------------------------------------------
+# SPS forward
+# ---------------------------------------------------------------------------
+
+
+def sps(z: Array, lam: Array) -> Array:
+    """Eq. 3: polarize scores to {0,1}.  lam broadcasts against z
+    ((), (H,1,1), or (H,L,1) for layer/head/row granularity)."""
+    return (z >= lam).astype(z.dtype)
+
+
+def sps_ste(z: Array, lam: Array, ste_width: float = 1.0) -> Array:
+    """SPS with a straight-through gradient window (train-time surrogate):
+    forward is the hard 0/1 step, backward passes gradient where
+    |z - lam| <= ste_width (matches BiT's clipped-STE convention)."""
+
+    @jax.custom_vjp
+    def _f(z_, lam_):
+        return (z_ >= lam_).astype(z_.dtype)
+
+    def _fwd(z_, lam_):
+        return _f(z_, lam_), (z_, lam_)
+
+    def _bwd(res, g):
+        z_, lam_ = res
+        win = (jnp.abs(z_ - lam_) <= ste_width).astype(g.dtype)
+        gz = g * win
+        glam = (-g * win)
+        # reduce lam grad over broadcast axes
+        while glam.ndim > lam_.ndim:
+            glam = glam.sum(0)
+        for ax, (gs, ls) in enumerate(zip(glam.shape, lam_.shape)):
+            if ls == 1 and gs != 1:
+                glam = glam.sum(axis=ax, keepdims=True)
+        return gz, glam
+
+    _f.defvjp(_fwd, _bwd)
+    return _f(z, lam)
+
+
+def integer_threshold(lam: Array, d_h: int, alpha_q: Array,
+                      alpha_k: Array) -> Array:
+    """Fold lambda + 1/sqrt(d_h) + binarization scales into the integer
+    RBMM threshold:  c >= theta  <=>  alpha_q*alpha_k*c/sqrt(d_h) >= lambda."""
+    scale = (alpha_q * alpha_k) / math.sqrt(d_h)
+    return jnp.ceil(lam / jnp.maximum(scale, 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# BiT reference attention probability (Eq. 2) — the search target
+# ---------------------------------------------------------------------------
+
+
+def att_prob_bit(z: Array, alpha: Array | float = 0.5,
+                 mask: Optional[Array] = None) -> Array:
+    """clip(round(softmax(z)/alpha), 0, 1) with optional masking (True=drop).
+
+    z: (..., L, L) pre-softmax scores QK^T/sqrt(d_h)."""
+    if mask is not None:
+        z = jnp.where(mask, -jnp.inf, z)
+    p = jax.nn.softmax(z, axis=-1)
+    a = jnp.maximum(jnp.asarray(alpha, p.dtype), 1e-6)
+    return jnp.clip(jnp.round(p / a), 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# CDR + search (Eq. 5/6)
+# ---------------------------------------------------------------------------
+
+
+def cdr(a1: Array, a2: Array, axes: Tuple[int, ...]) -> Array:
+    """Channel Distortion Rate: MSE between two attention maps over `axes`."""
+    d = (a1.astype(jnp.float32) - a2.astype(jnp.float32)) ** 2
+    return d.mean(axis=axes)
+
+
+def _reduce_axes(granularity: str, ndim: int) -> Tuple[int, ...]:
+    # z: (B, H, L, L).  layer -> scalar; head -> (H,); row -> (H, L).
+    if granularity == "layer":
+        return tuple(range(ndim))
+    if granularity == "head":
+        return (0,) + tuple(range(2, ndim))
+    if granularity == "row":
+        return (0, ndim - 1)
+    raise ValueError(f"granularity must be one of {GRANULARITIES}")
+
+
+def search_thresholds(z: Array, target: Array, *, granularity: str = "head",
+                      grid: Array = DEFAULT_GRID,
+                      mask: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Grid-search lambda* minimizing CDR(target, SPS(z; lam)) (Eq. 6).
+
+    z:      (B, H, L, L) calibration scores (already 1/sqrt(d_h)-scaled).
+    target: (B, H, L, L) BiT binarized attention probs (att_prob_bit output).
+    Returns (lam*, cdr*) with shapes:
+      layer -> ((), ()),  head -> ((H,), (H,)),  row -> ((H, L), (H, L)).
+    Loops over the (21-point) grid to avoid a (G, B, H, L, L) tensor.
+    """
+    axes = _reduce_axes(granularity, z.ndim)
+
+    def one(lam):
+        probs = sps(z, lam)
+        if mask is not None:
+            probs = jnp.where(mask, 0.0, probs)
+        return cdr(target, probs, axes)
+
+    losses = jax.lax.map(one, grid)           # (G, *unit_shape)
+    best = jnp.argmin(losses, axis=0)
+    lam_star = grid[best]
+    cdr_star = jnp.take_along_axis(losses, best[None], axis=0)[0]
+    return lam_star, cdr_star
+
+
+@dataclasses.dataclass
+class SPSCalibration:
+    """Search result for one attention layer."""
+    lam: Array              # per granularity unit
+    cdr: Array
+    granularity: str
+
+    def lam_broadcast(self) -> Array:
+        """lambda shaped to broadcast against (B, H, L, L) scores."""
+        if self.granularity == "layer":
+            return self.lam
+        if self.granularity == "head":
+            return self.lam[:, None, None]
+        return self.lam[:, :, None]           # row: (H, L, 1)
+
+
+def calibrate_layer(z: Array, *, bit_alpha: Array | float = 0.5,
+                    granularity: str = "head",
+                    mask: Optional[Array] = None,
+                    grid: Array = DEFAULT_GRID) -> SPSCalibration:
+    """End-to-end per-layer calibration: build the BiT target from the same
+    scores (Eq. 2), then search (Eq. 6)."""
+    target = att_prob_bit(z, bit_alpha, mask)
+    lam, c = search_thresholds(z, target, granularity=granularity, grid=grid,
+                               mask=mask)
+    return SPSCalibration(lam=lam, cdr=c, granularity=granularity)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 similarity diagnostics (used by benchmarks/table1_accuracy.py)
+# ---------------------------------------------------------------------------
+
+
+def similarity_report(bit_probs: Array, sps_probs: Array) -> Dict[str, float]:
+    """Cosine similarity, Pearson correlation and row-norm agreement between
+    BiT-softmax attention and SPS attention (paper Fig. 3)."""
+    a = bit_probs.astype(jnp.float32).reshape(-1)
+    b = sps_probs.astype(jnp.float32).reshape(-1)
+    eps = 1e-8
+    cos = jnp.vdot(a, b) / (jnp.linalg.norm(a) * jnp.linalg.norm(b) + eps)
+    am, bm = a - a.mean(), b - b.mean()
+    corr = jnp.vdot(am, bm) / (jnp.linalg.norm(am) * jnp.linalg.norm(bm) + eps)
+    rn_a = bit_probs.astype(jnp.float32).sum(-1)
+    rn_b = sps_probs.astype(jnp.float32).sum(-1)
+    rn = jnp.corrcoef(rn_a.reshape(-1), rn_b.reshape(-1))[0, 1]
+    return {"cosine": float(cos), "pearson": float(corr),
+            "row_norm_corr": float(rn)}

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel ships three files per the deliverable contract:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (interpret mode off-TPU)
+  ref.py    — pure-jnp oracle the kernel must match exactly
+
+  rbmm/      RBMM engine: XNOR/AND + popcount + fused Eq.10 threshold (VPU)
+  rbmm_mxu/  packed-weight matmul: unpack to +-1 bf16 in VMEM -> MXU
+  sps_attn/  fused SPS binary attention (tile-decoupled streaming;
+             simpler than FlashAttention — no softmax state)
+  pack/      threshold-binarize + bit-pack (data packing conversion unit)
+"""

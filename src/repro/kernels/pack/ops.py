@@ -1,0 +1,12 @@
+"""Jit'd wrapper for the pack kernel (interpret off-TPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.pack import kernel as _k
+
+
+def pack_threshold(x: jax.Array, theta: jax.Array, *, bm: int = _k.DEFAULT_BM,
+                   bw: int = _k.DEFAULT_BW) -> jax.Array:
+    return _k.pack_threshold(x, theta, bm=bm, bw=bw,
+                             interpret=jax.default_backend() != "tpu")

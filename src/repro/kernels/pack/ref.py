@@ -1,0 +1,12 @@
+"""Oracle for the pack kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+def pack_threshold(x: jax.Array, theta: jax.Array) -> jax.Array:
+    bits = (x >= theta.reshape(1, -1)).astype(jnp.uint32)
+    return packing.pack_bits(bits)

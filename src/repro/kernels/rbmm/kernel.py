@@ -1,0 +1,197 @@
+"""Pallas TPU kernel for RBMM (paper's RBMM engine, VPU popcount path).
+
+Maps the FPGA PE array onto the TPU VPU:
+  * datapacks = uint32 words along the contraction dim (32 values/word;
+    the FPGA used 768-bit BRAM words — Eq. 8 compositionality makes the
+    word width a free parameter),
+  * XNOR/AND + popcount on (8,128) vregs replaces the LUT compressor trees
+    (``lax.population_count`` is a native VPU op; the 6:3-compressor trick is
+    FPGA-specific and documented as non-transferable in DESIGN.md),
+  * the quantization-fused epilogue (Eq. 10) emits {0,1} bits straight from
+    the integer accumulator exactly like the paper's threshold port,
+  * II=1 pipelining maps to Mosaic's double-buffered grid pipeline: each
+    (i, j) grid step DMAs the next A/B tiles while the VPU chews the
+    current one.
+
+Grid: (M/bm, P/bn).  K (packed: Kp words) is kept whole in VMEM per tile —
+for d up to 16384, Kp <= 512 words = 2 KiB/row; tiles of 256 rows are
+256 KiB, far under the ~16 MiB VMEM budget, so no K-grid is needed (the
+FFN contraction FF = R*d uses the Eq. 11 blocking at the layer above
+instead, exactly like the paper's two l x d buffers).
+
+Per grid step the kernel loops over the bm rows of the A tile; each row
+broadcasts against the whole (bn, Kp) B tile: one (bn, Kp) uint32 xor/and +
+popcount + lane-reduction per row, i.e. ~3 VPU ops per 32 MACs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+
+
+def _row_body(scheme: str, k: int, kp: int, a_tile, b_tile, i):
+    """RBVM of A-tile row i against the whole B tile -> (bn,) int32.
+    Pad-0 convention: XNOR pad bits contribute 1 each, folded statically."""
+    row = lax.dynamic_slice_in_dim(a_tile, i, 1, axis=0)       # (1, kp)
+    if scheme == "xnor":
+        x = ~(row ^ b_tile)                                    # (bn, kp)
+        pad = kp * 32 - k
+        const = k + 2 * pad
+    else:
+        x = row & b_tile
+        const = k
+    pc = lax.population_count(x).astype(jnp.int32).sum(axis=-1)
+    return 2 * pc - jnp.int32(const)                           # (bn,)
+
+
+def _rbmm_int_kernel(a_ref, b_ref, dc_ref, out_ref, *, scheme: str, k: int,
+                     bm: int, kp: int):
+    a_tile = a_ref[...]
+    b_tile = b_ref[...]
+
+    def body(i, _):
+        c = _row_body(scheme, k, kp, a_tile, b_tile, i)
+        if scheme == "and_dc":
+            c = c + dc_ref[i, 0]
+        out_ref[i, :] = c
+        return 0
+
+    lax.fori_loop(0, bm, body, 0)
+
+
+def _rbmm_binary_kernel(a_ref, b_ref, dc_ref, theta_ref, out_ref,
+                        dc_out_ref, *, scheme: str, k: int, bm: int,
+                        causal: bool, bn: int, kp: int):
+    """Quantization-fused variant: out bits = (c >= theta_j), optional causal
+    mask by global index compare (the paper's M2 iterative index check), and
+    the DC RETURN (zeros-per-row count) accumulated across N-tiles."""
+    a_tile = a_ref[...]
+    b_tile = b_ref[...]
+    theta = theta_ref[0, :]                                    # (bn,)
+    j0 = pl.program_id(1) * bn
+    i0 = pl.program_id(0) * bm
+    col = j0 + lax.broadcasted_iota(jnp.int32, (bn,), 0)
+
+    def body(i, _):
+        c = _row_body(scheme, k, kp, a_tile, b_tile, i)
+        if scheme == "and_dc":
+            c = c + dc_ref[i, 0]
+        bits = (c >= theta).astype(jnp.uint32)
+        if causal:
+            bits = jnp.where(col <= i0 + i, bits, jnp.uint32(0))
+        out_ref[i, :] = bits
+        dc_out_ref[i, 0] = jnp.int32(bn) - bits.sum().astype(jnp.int32)
+        return 0
+
+    lax.fori_loop(0, bm, body, 0)
+
+
+def _pad_to(x, mult, axis, value):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "scheme", "bm", "bn",
+                                             "interpret"))
+def rbmm_int(a: jax.Array, b: jax.Array, k: int, *, scheme: str = "xnor",
+             dc: Optional[jax.Array] = None, bm: int = DEFAULT_BM,
+             bn: int = DEFAULT_BN, interpret: bool = True) -> jax.Array:
+    """Integer RBMM via Pallas.  a: (M, Kp) uint32, b: (P, Kp) uint32 ->
+    (M, P) int32.  Exactly matches ``repro.kernels.rbmm.ref.rbmm_int``."""
+    m, kp = a.shape
+    p, _ = b.shape
+    if dc is None:
+        if scheme == "and_dc":
+            pc = lax.population_count(a).astype(jnp.int32).sum(-1)
+            dc = jnp.int32(k) - pc
+        else:
+            dc = jnp.zeros((m,), jnp.int32)
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(p, 1))
+    a_p = _pad_to(a, bm, 0, 0)
+    # B pad rows: value irrelevant (rows sliced off), use 0.
+    b_p = _pad_to(b, bn, 0, 0)
+    dc_p = _pad_to(dc.reshape(-1, 1), bm, 0, 0)
+    mp, pp = a_p.shape[0], b_p.shape[0]
+    grid = (mp // bm, pp // bn)
+    out = pl.pallas_call(
+        functools.partial(_rbmm_int_kernel, scheme=scheme, k=k, bm=bm,
+                          kp=kp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kp), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, pp), jnp.int32),
+        interpret=interpret,
+    )(a_p, b_p, dc_p)
+    return out[:m, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "scheme", "causal", "bm",
+                                             "bn", "interpret"))
+def rbmm_binary(a: jax.Array, b: jax.Array, k: int, theta: jax.Array, *,
+                scheme: str = "xnor", dc: Optional[jax.Array] = None,
+                causal: bool = False, bm: int = DEFAULT_BM,
+                bn: int = DEFAULT_BN, interpret: bool = True):
+    """Quantization-fused RBMM via Pallas (Eq. 10 epilogue in-kernel).
+
+    Returns (bits (M, P) uint32 in {0,1}, dc_return (M,) int32).
+    dc_return counts zeros over the full P (summed across N-tiles outside the
+    kernel to stay associative)."""
+    m, kp = a.shape
+    p, _ = b.shape
+    if dc is None:
+        if scheme == "and_dc":
+            pc = lax.population_count(a).astype(jnp.int32).sum(-1)
+            dc = jnp.int32(k) - pc
+        else:
+            dc = jnp.zeros((m,), jnp.int32)
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(p, 1))
+    a_p = _pad_to(a, bm, 0, 0)
+    b_p = _pad_to(b, bn, 0, 0)
+    dc_p = _pad_to(dc.reshape(-1, 1), bm, 0, 0)
+    theta_p = _pad_to(theta.reshape(1, -1).astype(jnp.int32), bn, 1,
+                      jnp.iinfo(jnp.int32).max)  # pad cols always bit 0
+    mp, pp = a_p.shape[0], b_p.shape[0]
+    grid = (mp // bm, pp // bn)
+    bits, dc_tiles = pl.pallas_call(
+        functools.partial(_rbmm_binary_kernel, scheme=scheme, k=k, bm=bm,
+                          causal=causal, bn=bn, kp=kp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kp), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, pp), jnp.uint32),
+            jax.ShapeDtypeStruct((mp, pp // bn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a_p, b_p, dc_p, theta_p)
+    bits = bits[:m, :p]
+    # Per-tile zero counts include padded rows/cols of the last tile; padded
+    # theta = int32.max forces bit 0 there, so subtract the pad contribution.
+    dc_ret = dc_tiles.sum(-1)[:m] - (pp - p)
+    return bits, dc_ret

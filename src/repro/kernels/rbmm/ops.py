@@ -1,0 +1,33 @@
+"""Jit'd public wrappers for the RBMM Pallas kernel.
+
+Dispatch rule: real Mosaic lowering on TPU backends, interpret mode
+elsewhere (CPU CI).  The oracle lives in ``ref.py``; ``repro.core.rbmm``
+holds the shape-polymorphic jnp implementation used inside model graphs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.rbmm import kernel as _k
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rbmm_int(a: jax.Array, b: jax.Array, k: int, *, scheme: str = "xnor",
+             dc: Optional[jax.Array] = None, bm: int = _k.DEFAULT_BM,
+             bn: int = _k.DEFAULT_BN) -> jax.Array:
+    return _k.rbmm_int(a, b, k, scheme=scheme, dc=dc, bm=bm, bn=bn,
+                       interpret=_interpret())
+
+
+def rbmm_binary(a: jax.Array, b: jax.Array, k: int, theta: jax.Array, *,
+                scheme: str = "xnor", dc: Optional[jax.Array] = None,
+                causal: bool = False, bm: int = _k.DEFAULT_BM,
+                bn: int = _k.DEFAULT_BN) -> Tuple[jax.Array, jax.Array]:
+    return _k.rbmm_binary(a, b, k, theta, scheme=scheme, dc=dc,
+                          causal=causal, bm=bm, bn=bn,
+                          interpret=_interpret())

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the RBMM Pallas kernel (no Pallas, no blocking)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import packing
+
+
+def rbmm_int(a: jax.Array, b: jax.Array, k: int, *, scheme: str = "xnor",
+             dc: Optional[jax.Array] = None) -> jax.Array:
+    """(M, Kp) x (P, Kp) -> (M, P) int32 via Eq. 7, unblocked."""
+    if scheme == "xnor":
+        x = ~(a[:, None, :] ^ b[None, :, :])
+        pc = lax.population_count(x).astype(jnp.int32).sum(-1)
+        pad = a.shape[-1] * packing.WORD - k
+        return 2 * pc - jnp.int32(k + 2 * pad)
+    if dc is None:
+        dc = packing.dc_count(a, k)
+    x = a[:, None, :] & b[None, :, :]
+    pc = lax.population_count(x).astype(jnp.int32).sum(-1)
+    return 2 * pc - jnp.int32(k) + dc[:, None].astype(jnp.int32)
+
+
+def rbmm_binary(a: jax.Array, b: jax.Array, k: int, theta: jax.Array, *,
+                scheme: str = "xnor", dc: Optional[jax.Array] = None,
+                causal: bool = False) -> Tuple[jax.Array, jax.Array]:
+    c = rbmm_int(a, b, k, scheme=scheme, dc=dc)
+    bits = (c >= theta.reshape(1, -1).astype(jnp.int32)).astype(jnp.uint32)
+    if causal:
+        m, p = bits.shape
+        row = jnp.arange(m)[:, None]
+        col = jnp.arange(p)[None, :]
+        bits = jnp.where(col <= row, bits, jnp.uint32(0))
+    dc_ret = jnp.int32(bits.shape[-1]) - bits.sum(-1, dtype=jnp.int32)
+    return bits, dc_ret
+
+
+def rbmm_int_dense(a_vals: jax.Array, b_vals: jax.Array) -> jax.Array:
+    """Ground-truth integer matmul on +-1/{0,1} value matrices."""
+    return (a_vals.astype(jnp.int32) @ b_vals.astype(jnp.int32).T)

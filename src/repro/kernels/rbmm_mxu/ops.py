@@ -1,0 +1,13 @@
+"""Jit'd wrapper for the MXU packed-weight kernel (interpret off-TPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rbmm_mxu import kernel as _k
+
+
+def rbmm_mxu(a_vals: jax.Array, w_packed: jax.Array, *,
+             bm: int = _k.DEFAULT_BM, bn: int = _k.DEFAULT_BN,
+             bk: int = _k.DEFAULT_BK) -> jax.Array:
+    return _k.rbmm_mxu(a_vals, w_packed, bm=bm, bn=bn, bk=bk,
+                       interpret=jax.default_backend() != "tpu")

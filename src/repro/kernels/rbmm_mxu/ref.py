@@ -1,0 +1,13 @@
+"""Oracle for the MXU packed-weight kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+def rbmm_mxu(a_vals: jax.Array, w_packed: jax.Array) -> jax.Array:
+    k = a_vals.shape[-1]
+    w = packing.unpack_signs(w_packed, k, dtype=jnp.float32)  # (P, K) +-1
+    return a_vals.astype(jnp.float32) @ w.T

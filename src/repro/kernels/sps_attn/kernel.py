@@ -1,0 +1,172 @@
+"""Fused SPS binary attention Pallas kernel (tile-decoupled streaming).
+
+The paper's killer observation, transferred to TPU: without softmax there is
+no running max / renormalization state, so attention tiles combine
+*associatively*.  This kernel is therefore strictly simpler than
+FlashAttention: for each (q-tile, k-tile) it
+
+  1. computes integer scores with XNOR+popcount on packed Q/K head bits
+     (the RBMM engine's M2 mode),
+  2. polarizes them with the per-head integer SPS threshold
+     (lambda * sqrt(d_h) / (alpha_q alpha_k) folded outside) and applies the
+     causal / padding mask by global index compare,
+  3. immediately consumes the binary probability tile against the V tile
+     (M3 mode) and accumulates the integer context — the l x l score matrix
+     never exists, not even tiled in HBM.
+
+Two context paths:
+  vpu : V^T stored packed along the sequence dim ((d_h, L/32) words);
+        context += 2*popcount(probs_packed & v_t) - nnz(probs)    (Eq. 7+8;
+        the -N+delta terms telescope to -nnz per tile).  Fully binary
+        datapath — the deploy/decode configuration.
+  mxu : V as +-1 bf16 values; context tile = probs @ V on the MXU — the
+        compute-bound prefill configuration (beyond-paper, see DESIGN.md).
+
+Grid: (H, Lq/bq, Lk/bk), k-innermost accumulation.  All operands for one
+(h, i) stripe stay in VMEM; Mosaic double-buffers the j-steps (the paper's
+II=1 pipeline analogue).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.packing import WORD
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+
+
+def _pows() -> jax.Array:
+    """2^i weights, built in-kernel (Pallas forbids captured constants)."""
+    return jnp.uint32(1) << lax.broadcasted_iota(jnp.uint32, (WORD,), 0)
+
+
+def _probs_tile(q, k, theta, d_h, i0, j0, bq, bk, causal, l_true):
+    """Integer M2 scores -> SPS bits for one (bq, bk) tile (pad-0 conv)."""
+    x = ~(q[:, None, :] ^ k[None, :, :])            # (bq, bk, dhp)
+    pc = lax.population_count(x).astype(jnp.int32).sum(-1)
+    pad = q.shape[-1] * WORD - d_h
+    c = 2 * pc - jnp.int32(d_h + 2 * pad)           # integer scores
+    bits = (c >= theta).astype(jnp.uint32)          # SPS polarization
+    col = j0 + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = col < l_true
+    if causal:
+        row = i0 + lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        valid = valid & (col <= row)
+    return jnp.where(valid, bits, jnp.uint32(0))
+
+
+def _pack_cols(bits: jax.Array) -> jax.Array:
+    """In-kernel data-packing conversion: (bq, bk) {0,1} -> (bq, bk/32)."""
+    bq, bk = bits.shape
+    g = bits.reshape(bq, bk // WORD, WORD)
+    return (g * _pows()[None, None, :]).sum(-1).astype(jnp.uint32)
+
+
+def _kernel_vpu(q_ref, k_ref, vt_ref, theta_ref, out_ref, *, d_h: int,
+                bq: int, bk: int, causal: bool, l_true: int):
+    h_i, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    del h_i
+    probs = _probs_tile(q_ref[0], k_ref[0], theta_ref[0, 0], d_h,
+                        i * bq, j * bk, bq, bk, causal, l_true)
+    pp = _pack_cols(probs)                          # (bq, bk/32)
+    vt = vt_ref[0]                                  # (dh, bk/32)
+    x = pp[:, None, :] & vt[None, :, :]             # (bq, dh, bk/32)
+    pc = lax.population_count(x).astype(jnp.int32).sum(-1)
+    nnz = probs.sum(-1, dtype=jnp.int32)
+    part = 2 * pc - nnz[:, None]                    # (bq, dh)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[0] = part
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[0] += part
+
+
+def _kernel_mxu(q_ref, k_ref, v_ref, theta_ref, out_ref, *, d_h: int,
+                bq: int, bk: int, causal: bool, l_true: int):
+    _, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    probs = _probs_tile(q_ref[0], k_ref[0], theta_ref[0, 0], d_h,
+                        i * bq, j * bk, bq, bk, causal, l_true)
+    part = jax.lax.dot_general(
+        probs.astype(jnp.bfloat16), v_ref[0],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (bq, dh)
+    part = part.astype(jnp.int32)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[0] = part
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[0] += part
+
+
+def _pad_axis(x, mult, axis, value=0):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "d_h", "causal", "path", "bq", "bk", "interpret"))
+def sps_attention(q_bits: jax.Array, k_bits: jax.Array, v: jax.Array,
+                  theta: jax.Array, *, d_h: int, causal: bool = True,
+                  path: str = "vpu", bq: int = DEFAULT_BQ,
+                  bk: int = DEFAULT_BK, interpret: bool = True) -> jax.Array:
+    """Fused binary attention for one sequence.
+
+    q_bits, k_bits: (H, L, d_h/32) uint32 signed-encoded head bits.
+    v: path="vpu": (H, d_h, ceil(L/32)) uint32 — V^T packed along L.
+       path="mxu": (H, L, d_h) bf16 +-1 values.
+    theta: (H,) int32 integer SPS thresholds (see repro.core.sps).
+    Returns integer context (H, L, d_h) int32 == probs @ V.
+    """
+    h, l, dhp = q_bits.shape
+    bq_ = min(bq, l)
+    bk_ = min(bk, l)
+    if bk_ % WORD:
+        bk_ = max(WORD, (bk_ // WORD) * WORD)
+    q_p = _pad_axis(q_bits, bq_, 1)
+    k_p = _pad_axis(k_bits, bk_, 1)
+    lq, lk = q_p.shape[1], k_p.shape[1]
+    theta2 = theta.reshape(h, 1).astype(jnp.int32)
+    grid = (h, lq // bq_, lk // bk_)
+    if path == "vpu":
+        v_p = _pad_axis(v, bk_ // WORD, 2)
+        kernel = functools.partial(_kernel_vpu, d_h=d_h, bq=bq_, bk=bk_,
+                                   causal=causal, l_true=l)
+        v_spec = pl.BlockSpec((1, d_h, bk_ // WORD), lambda hh, i, j: (hh, 0, j))
+    elif path == "mxu":
+        v_p = _pad_axis(v.astype(jnp.bfloat16), bk_, 1)
+        kernel = functools.partial(_kernel_mxu, d_h=d_h, bq=bq_, bk=bk_,
+                                   causal=causal, l_true=l)
+        v_spec = pl.BlockSpec((1, bk_, d_h), lambda hh, i, j: (hh, j, 0))
+    else:
+        raise ValueError(f"path must be 'vpu' or 'mxu', got {path!r}")
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, dhp), lambda hh, i, j: (hh, i, 0)),
+            pl.BlockSpec((1, bk_, dhp), lambda hh, i, j: (hh, j, 0)),
+            v_spec,
+            pl.BlockSpec((1, 1), lambda hh, i, j: (hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, d_h), lambda hh, i, j: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, lq, d_h), jnp.int32),
+        interpret=interpret,
+    )(q_p, k_p, v_p, theta2)
+    return out[:, :l, :]

@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the fused SPS attention kernel (interpret off-TPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.sps_attn import kernel as _k
+
+
+def sps_attention(q_bits: jax.Array, k_bits: jax.Array, v: jax.Array,
+                  theta: jax.Array, *, d_h: int, causal: bool = True,
+                  path: str = "vpu", bq: int = _k.DEFAULT_BQ,
+                  bk: int = _k.DEFAULT_BK) -> jax.Array:
+    return _k.sps_attention(q_bits, k_bits, v, theta, d_h=d_h, causal=causal,
+                            path=path, bq=bq, bk=bk,
+                            interpret=jax.default_backend() != "tpu")

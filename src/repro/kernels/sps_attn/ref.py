@@ -1,0 +1,30 @@
+"""Oracle for the fused SPS attention kernel: unfused, unpacked, pure jnp."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+def sps_attention(q_bits: jax.Array, k_bits: jax.Array,
+                  v_vals: jax.Array, theta: jax.Array, *, d_h: int,
+                  causal: bool = True) -> jax.Array:
+    """q_bits/k_bits: (H, L, d_h/32) packed; v_vals: (H, L, d_h) +-1 values.
+    Returns (H, L, d_h) int32 context."""
+    h, l, _ = q_bits.shape
+    q = packing.unpack_signs(q_bits, d_h, jnp.int32)      # (H, L, dh) +-1
+    k = packing.unpack_signs(k_bits, d_h, jnp.int32)
+    c = jnp.einsum("hqd,hkd->hqk", q, k)                  # integer scores
+    probs = (c >= theta[:, None, None].astype(jnp.int32)).astype(jnp.int32)
+    if causal:
+        mask = jnp.tril(jnp.ones((l, l), jnp.int32))
+        probs = probs * mask[None]
+    return jnp.einsum("hqk,hkd->hqd", probs, v_vals.astype(jnp.int32))
+
+
+def v_transpose_packed(v_vals: jax.Array) -> jax.Array:
+    """(H, L, d_h) +-1 values -> (H, d_h, ceil(L/32)) packed along L (the
+    layout the vpu context path and the decode V-cache use)."""
+    vt = jnp.swapaxes(v_vals, -1, -2)                     # (H, dh, L)
+    return packing.pack_signs(vt)

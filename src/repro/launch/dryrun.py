@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+# (No `from __future__` here for the same reason: nothing before the env var.)
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real jit'd step (train_step with optimizer
+update / deploy prefill / deploy decode) against ShapeDtypeStruct inputs
+carrying the production shardings, compiles it for the 16x16 = 256-chip
+single-pod mesh or the 2x16x16 = 512-chip multi-pod mesh, and records
+``memory_analysis()`` (proves it fits), ``cost_analysis()`` (FLOPs/bytes for
+the roofline) and the collective-op byte census parsed from the optimized
+HLO.  Artifacts land in benchmarks/artifacts/dryrun/ as JSON.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfg_base
+from repro.launch import hlo_cost, mesh as mesh_lib, roofline, \
+    specs as specs_lib
+from repro.models.lm import EncDecModel, build_model
+from repro.models.sharding import activation_sharding
+from repro.optim.adamw import AdamW
+from repro.train.trainer import Trainer, TrainerConfig
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+
+def _mesh(kind: str):
+    return mesh_lib.make_production_mesh(multi_pod=(kind == "multi"))
+
+
+def _face(shape: cfg_base.ShapeConfig) -> str:
+    return {"train": "train", "prefill": "prefill",
+            "decode": "decode"}[shape.kind]
+
+
+def build_lowered(arch: str, shape_name: str, mesh_kind: str,
+                  impl: Optional[str] = None,
+                  overrides: Optional[Dict[str, Any]] = None,
+                  variant: str = "default"):
+    """Returns (lowered, face, cfg, shape, mesh).
+
+    variant="qat_dense": for prefill cells, lower the QAT (latent fp
+    weights) forward instead of the packed deploy forward — the paper's
+    dense-baseline analogue for before/after comparisons in §Perf.
+    """
+    cfg = cfg_base.get_config(arch)
+    if impl:
+        cfg = cfg.with_(binary=cfg.binary.__class__(
+            **{**cfg.binary.__dict__, "impl": impl}))
+    if overrides:
+        plain = {k: v for k, v in overrides.items() if "." not in k}
+        nested = {k.split(".", 1)[1]: v for k, v in overrides.items()
+                  if k.startswith("binary.")}
+        if nested:
+            cfg = cfg.with_(binary=cfg.binary.__class__(
+                **{**cfg.binary.__dict__, **nested}))
+        if plain:
+            cfg = cfg.with_(**plain)
+    shape = cfg_base.SHAPES[shape_name]
+    mesh = _mesh(mesh_kind)
+    face = _face(shape)
+    model = build_model(cfg)
+    daxes = mesh_lib.data_axes(mesh)
+
+    with mesh:
+        with activation_sharding(mesh, daxes):
+            if face == "prefill" and variant == "qat_dense":
+                opt = AdamW(lr=1e-4)
+                trainer = Trainer(model, opt, mesh, TrainerConfig())
+                pshapes = jax.eval_shape(
+                    model.init, jax.random.PRNGKey(0))
+                psds = jax.tree.map(
+                    lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                                      sharding=s),
+                    pshapes, mesh_lib.named(mesh, trainer.param_specs))
+                batch_sds = specs_lib.batch_specs(cfg, shape, mesh)
+
+                if isinstance(model, EncDecModel):
+                    def qat_prefill(p, batch):
+                        mem = model.encode(p, batch["frontend_embeds"])
+                        x = model._embed_tokens(p, batch["tokens"])
+                        x = model._decode_stack(p, x, mem, deploy=False)
+                        return model._head().apply(
+                            p["head"],
+                            model._norm().apply(p["final_norm"], x))
+                else:
+                    def qat_prefill(p, batch):
+                        kw = {}
+                        if "frontend_embeds" in batch:
+                            kw["frontend_embeds"] = batch["frontend_embeds"]
+                        return model.qat_logits(p, batch["tokens"], **kw)
+
+                lowered = jax.jit(qat_prefill).lower(psds, batch_sds)
+            elif face == "train":
+                opt = AdamW(lr=1e-4,
+                            moment_dtype=jnp.dtype(cfg.optim_moment_dtype))
+                trainer = Trainer(model, opt, mesh, TrainerConfig())
+                state_sds = specs_lib.train_state_specs(trainer)
+                batch_sds = specs_lib.batch_specs(cfg, shape, mesh)
+                trainer._build_train_step()
+                lowered = trainer._train_step.lower(state_sds, batch_sds)
+            elif face == "prefill":
+                dparams = specs_lib.deploy_param_specs(model, mesh)
+                batch_sds = specs_lib.batch_specs(cfg, shape, mesh)
+
+                def prefill(dp, batch):
+                    kw = {}
+                    if "frontend_embeds" in batch:
+                        kw["frontend_embeds"] = batch["frontend_embeds"]
+                    return model.prefill_logits(dp, batch["tokens"], **kw)
+
+                lowered = jax.jit(prefill).lower(dparams, batch_sds)
+            else:  # decode
+                dparams, token, caches = specs_lib.decode_specs(cfg, shape,
+                                                                mesh)
+
+                def decode(dp, tok, cs):
+                    return model.decode_step(dp, tok, cs)
+
+                lowered = jax.jit(decode, donate_argnums=(2,)).lower(
+                    dparams, token, caches)
+    return lowered, face, cfg, shape, mesh
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             out_dir: str = ARTIFACT_DIR, verbose: bool = True,
+             impl: Optional[str] = None,
+             overrides: Optional[Dict[str, Any]] = None,
+             variant: str = "default",
+             tag: str = "") -> Dict[str, Any]:
+    cfg = cfg_base.get_config(arch)
+    shape = cfg_base.SHAPES[shape_name]
+    valid = cfg_base.valid_shapes(cfg)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "impl": impl or cfg.binary.impl,
+                           "overrides": overrides or {}, "variant": variant,
+                           "tag": tag}
+    if shape_name not in valid:
+        rec["status"] = "SKIP"
+        rec["reason"] = ("needs sub-quadratic attention"
+                         if shape_name == "long_500k" else "no decode face")
+        _save(rec, out_dir, tag)
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: SKIP "
+                  f"({rec['reason']})")
+        return rec
+    t0 = time.time()
+    try:
+        lowered, face, cfg, shape, mesh = build_lowered(
+            arch, shape_name, mesh_kind, impl=impl, overrides=overrides,
+            variant=variant)
+        rec["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+        ca = compiled.cost_analysis() or {}
+        # raw numbers count while-loop bodies once (XLA limitation) — keep
+        # them for reference, but the roofline uses the loop-corrected
+        # analysis from repro.launch.hlo_cost.
+        rec["raw_flops"] = float(ca.get("flops", 0.0))
+        rec["raw_bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        rec["transcendentals"] = float(ca.get("transcendentals", 0.0))
+        try:
+            ma = compiled.memory_analysis()
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+        except Exception as e:  # noqa: BLE001 — backend-dependent
+            rec["memory_analysis_error"] = str(e)
+        hlo = compiled.as_text()
+        corrected = hlo_cost.analyze(hlo)
+        rec["flops"] = corrected["flops"]
+        rec["bytes_accessed"] = corrected["bytes"]
+        rec["popcnt_elems"] = corrected["popcnt_elems"]
+        rec["collectives"] = corrected["collectives"]
+        rec["collectives_raw_once"] = roofline.parse_collectives(hlo)
+        rec["hlo_ops"] = hlo.count("\n")
+        rec["face"] = face
+        terms = roofline.terms_from_artifact(rec, cfg, shape, face,
+                                             chips=mesh.devices.size)
+        rec["roofline"] = terms.to_dict()
+        rec["status"] = "OK"
+        if verbose:
+            t = rec["roofline"]
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_kind} "
+                  f"[{rec['impl']}]: OK "
+                  f"lower {rec['lower_s']:.1f}s compile {rec['compile_s']:.1f}s "
+                  f"flops {rec['flops']:.3g} bytes {rec['bytes_accessed']:.3g} "
+                  f"coll {sum(rec['collectives'].values()):.3g} "
+                  f"dominant={t['dominant']}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: FAIL "
+                  f"{rec['error']}")
+    _save(rec, out_dir, tag)
+    return rec
+
+
+def _save(rec: Dict[str, Any], out_dir: str, tag: str = "") -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None,
+                   choices=list(cfg_base.SHAPES) + [None])
+    p.add_argument("--mesh", default="single",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--impl", default=None,
+                   choices=["popcount", "mxu", "dense", None])
+    p.add_argument("--variant", default="default",
+                   choices=["default", "qat_dense"])
+    p.add_argument("--override", action="append", default=[],
+                   help="ModelConfig override, e.g. act_shard=none")
+    p.add_argument("--tag", default="")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default=ARTIFACT_DIR)
+    args = p.parse_args()
+
+    overrides: Dict[str, Any] = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    archs = [a for a in cfg_base.ARCH_IDS if a != "bert-base-cobra"] \
+        if args.all or not args.arch else [args.arch]
+    shapes = list(cfg_base.SHAPES) if args.all or not args.shape \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    fails = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                rec = run_cell(arch, shape, mk, out_dir=args.out,
+                               impl=args.impl, overrides=overrides or None,
+                               variant=args.variant, tag=args.tag)
+                fails += rec["status"] == "FAIL"
+    if fails:
+        raise SystemExit(f"{fails} dry-run cells FAILED")
+
+
+if __name__ == "__main__":
+    main()

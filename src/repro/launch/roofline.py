@@ -1,0 +1,138 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms, in seconds, per (arch x shape x mesh) — TPU v5e constants:
+
+  compute    = HLO_FLOPs        / (chips * 197e12 FLOP/s bf16)
+  memory     = HLO_bytes        / (chips * 819e9  B/s HBM)
+  collective = collective_bytes / (chips * 50e9   B/s per ICI link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are NOT in cost_analysis, so ``parse_collectives`` regex-walks the
+optimized HLO and sums result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.  Shapes in the partitioned
+module are per-device, so sums are per-chip already; cost_analysis totals
+are for one partition too, so the per-chip time is FLOPs/peak without the
+chips division — we keep BOTH conventions in the artifact and use per-chip
+for the table (chips=1 in the denominators below, global numbers are
+chips * per-chip by SPMD symmetry).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e-class target)
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+VPU_OPS = 4e12             # int32 VPU ops/s / chip (popcount path budget);
+#                            1 packed word = 32 binary MACs in ~3 VPU ops
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# `%name = TYPE[d0,d1]{layout} op-name(...)` — possibly tuple results
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\s(.]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        bytes_per = _DTYPE_BYTES.get(dtype)
+        if bytes_per is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * bytes_per
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind over an (optimized) HLO dump."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # 'start' variants appear as e.g. all-gather-start; the regex above
+        # anchors on the base name followed by '(' or '-'; count each once.
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float             # max(MXU fp time, VPU popcount time)
+    memory_s: float
+    collective_s: float
+    flops: float
+    vpu_s: float                 # popcount-path VPU seconds (binary MACs)
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    useful_ratio: float          # MODEL_FLOPS / (chips * HLO_FLOPs)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound assuming perfect overlap: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["step_time_s"] = self.step_time_s
+        return d
+
+
+def model_flops(cfg, shape, face: str) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D prefill, 2*N per decode
+    token, with N = active params (MoE: top-k only)."""
+    n_active = cfg.active_param_count()
+    if face == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if face == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def terms_from_artifact(art: Dict[str, Any], cfg=None, shape=None,
+                        face: str = "train", chips: int = 1
+                        ) -> RooflineTerms:
+    flops = float(art.get("flops", 0.0))
+    hbytes = float(art.get("bytes_accessed", 0.0))
+    cbytes = float(sum(art.get("collectives", {}).values()))
+    popcnt = float(art.get("popcnt_elems", 0.0))
+    vpu_s = popcnt * 3.0 / VPU_OPS     # xor/and + popcnt + add per word
+    mf = model_flops(cfg, shape, face) if cfg is not None else 0.0
+    useful = mf / max(chips * flops, 1.0)
+    return RooflineTerms(
+        compute_s=max(flops / PEAK_FLOPS, vpu_s),
+        memory_s=hbytes / HBM_BW,
+        collective_s=cbytes / ICI_BW,
+        flops=flops, vpu_s=vpu_s, hlo_bytes=hbytes, collective_bytes=cbytes,
+        model_flops=mf, useful_ratio=useful)
+
+
+def load_artifact(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,130 @@
+"""ShapeDtypeStruct input specs for every (arch x shape x face) cell.
+
+The dry-run contract: weak-type-correct, shardable stand-ins for every model
+input, with zero device allocation.  Three faces:
+
+  train   -> (state, batch)        for  train_step(state, batch)
+  prefill -> (dparams, batch)      for  prefill_logits(dparams, ...)
+  decode  -> (dparams, token, caches)  for  decode_step(...)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import mesh as mesh_lib
+from repro.models.lm import EncDecModel, build_model
+
+Params = Any
+
+
+def _sds(tree: Params, shardings: Optional[Params] = None) -> Params:
+    """Attach shardings to a tree of ShapeDtypeStructs."""
+    if shardings is None:
+        return tree
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        tree, shardings)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Token/label/frontend stand-ins for a full-sequence face."""
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - cfg.frontend_tokens if cfg.frontend_tokens and \
+        cfg.family != "audio" else s
+    out = {"tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+           "labels": jax.ShapeDtypeStruct((b, s_text), jnp.int32)}
+    if cfg.frontend_tokens:
+        d_f = min(cfg.d_model, 1024)
+        n_f = cfg.frontend_tokens
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, n_f, d_f), jnp.float32)
+    shardings = mesh_lib.batch_shardings(mesh, out)
+    return _sds(out, shardings)
+
+
+def _shard_batch_dim(mesh: Mesh, tree: Params, batch: int) -> Params:
+    """Shard dim0 over data axes when divisible, else replicate."""
+    daxes = mesh_lib.data_axes(mesh)
+    dtotal = mesh_lib.data_size(mesh)
+
+    def spec(x):
+        nd = len(x.shape)
+        if nd and x.shape[0] == batch and batch % dtotal == 0:
+            return NamedSharding(mesh, P(daxes, *([None] * (nd - 1))))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(
+        x.shape, x.dtype, sharding=spec(x)), tree)
+
+
+def cache_shardings(mesh: Mesh, caches_shape: Params, *, batch: int,
+                    model_axis: str = "model") -> Params:
+    """Binary-cache sharding: batch over data axes (when divisible), kv-head
+    dim over "model" (when divisible), and for unsharded-batch cells
+    (long_500k) the sequence/ring dim over "data" (sequence parallelism)."""
+    daxes = mesh_lib.data_axes(mesh)
+    dtotal = mesh_lib.data_size(mesh)
+    msize = mesh.shape[model_axis]
+
+    def spec(x):
+        dims = x.shape
+        entries = [None] * len(dims)
+        if not dims:
+            return NamedSharding(mesh, P())
+        if len(dims) >= 1 and dims[0] == batch and batch % dtotal == 0:
+            entries[0] = daxes
+        if len(dims) >= 2 and dims[1] % msize == 0 and dims[1] > 1:
+            entries[1] = model_axis
+        if entries[0] is None and len(dims) >= 3:
+            # SP: shard the largest remaining dim (ring length / packed words)
+            cand = max(range(2, len(dims)), key=lambda i: dims[i])
+            if dims[cand] % dtotal == 0 and dims[cand] >= dtotal:
+                entries[cand] = daxes
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(
+        x.shape, x.dtype, sharding=spec(x)), caches_shape)
+
+
+def deploy_param_specs(model, mesh: Mesh) -> Params:
+    """Deploy params as sharded ShapeDtypeStructs (no allocation)."""
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    dshapes = jax.eval_shape(model.convert, pshapes)
+    # packed weights are 32x smaller; TP sharding alone fits every arch,
+    # so no FSDP pass here (checked by memory_analysis in the dry-run)
+    shardings = mesh_lib.named(mesh, model.deploy_specs())
+    return _sds(dshapes, shardings)
+
+
+def train_state_specs(trainer) -> Params:
+    """TrainState as sharded ShapeDtypeStructs via the trainer's specs."""
+    shapes = jax.eval_shape(trainer.init_state)
+    return _sds(shapes, trainer.state_shardings)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                 ) -> Tuple[Params, Params, Params]:
+    """(dparams, token, caches) stand-ins for the decode face.
+    The KV cache covers shape.seq_len tokens; the step decodes token
+    seq_len+1 (the prompt's serve_step definition)."""
+    model = build_model(cfg)
+    b = shape.global_batch
+    dparams = deploy_param_specs(model, mesh)
+    if isinstance(model, EncDecModel):
+        caches_shape = jax.eval_shape(
+            lambda: model.init_caches(b, shape.seq_len,
+                                      memory_len=cfg.frontend_tokens))
+    else:
+        caches_shape = jax.eval_shape(
+            lambda: model.init_caches(b, shape.seq_len))
+    caches = cache_shardings(mesh, caches_shape, batch=b)
+    token = _shard_batch_dim(
+        mesh, {"t": jax.ShapeDtypeStruct((b, 1), jnp.int32)}, b)["t"]
+    return dparams, token, caches

@@ -1,0 +1,4 @@
+"""Binary model zoo.  ``build_model(cfg)`` returns an LMModel/EncDecModel."""
+from repro.models.lm import EncDecModel, LMModel, build_model
+
+__all__ = ["EncDecModel", "LMModel", "build_model"]

@@ -1,0 +1,657 @@
+"""SPS binary attention (paper §III-A) — QAT twin + deploy paths.
+
+One module, three execution faces, numerically identical where they overlap:
+
+  qat(...)            BiT-style latent training forward with SPS-STE (or the
+                      BiT softmax+elastic-binarization teacher, for
+                      calibration/distillation — ``attn_mode="bit_softmax"``).
+  deploy_prefill(...) packed-bit forward (M1 -> M2 -> M3 -> M4), returns the
+                      binary KV cache.
+  deploy_decode(...)  single-token step against the packed cache — the fully
+                      binary datapath: K packed along d_h, V^T packed along
+                      the sequence dim, probs packed in-flight (Eq. 7 both
+                      schemes), 1 bit/value end to end.
+
+Attention is *chunked over query rows everywhere* (lax.map over q-chunks):
+SPS has no softmax state, so chunks combine associatively and the l x l
+score matrix never materializes — this is the graph-level mirror of the
+fused Pallas kernel (repro.kernels.sps_attn), which replaces the chunk body
+on real TPU runs.
+
+Supports GQA (kv heads broadcast to q heads), RoPE (applied on the fp
+projections *before* per-head binarization; BERT-style archs skip it and use
+the fused M1 binary-out path), sliding windows (static or per-layer traced —
+gemma's 5:1 local:global stacks scan with the window as per-layer data),
+cross-attention (enc-dec), and the three SPS threshold granularities.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import binarize, packing, rbmm, sps
+from repro.models import nn
+from repro.models.linear import BinaryDense
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+ROW_TABLE = 512  # row-granularity lambda table (paper's l=512); longer rows clamp
+
+# Default q-row chunk for the chunked attention scan.
+Q_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, dh), positions: (..., S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Binary KV cache.  k_bits: (B, Hkv, W, dh/32) packed along d_h;
+    vt_bits: (B, Hkv, dh, W/32) packed along the (ring) sequence dim;
+    length: scalar int32 — number of tokens written (ring wraps at W)."""
+    k_bits: Array
+    vt_bits: Array
+    length: Array
+
+
+# ---------------------------------------------------------------------------
+# Module
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SPSAttention:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    use_rope: bool = True
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    sps_granularity: str = "head"   # layer | head | row
+    attn_mode: str = "sps"          # sps | bit_softmax (BiT teacher)
+    cross: bool = False             # cross-attention (KV from memory)
+    dtype: Any = jnp.float32
+    q_chunk: int = Q_CHUNK
+    impl: str = "auto"              # deploy matmul impl
+    # decode: read the KV cache grouped by kv head instead of materializing
+    # a q-heads-wide repeat (G x less cache-sized intermediate traffic)
+    grouped_decode: bool = False
+    # O(S*W) sliced-window chunking for static windows (False = dense mask)
+    window_chunk: bool = True
+    # wo sharding: "row" (all-reduce f32 partials) | "col" (all-gather of
+    # packed context bits — 32x less wire)
+    wo_partition: str = "row"
+
+    # -- construction --------------------------------------------------------
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def groups(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def _dense(self, in_dim, out_dim, part) -> BinaryDense:
+        return BinaryDense(in_dim, out_dim, use_bias=self.qkv_bias and
+                           part == "col", partition=part, external_act=True,
+                           dtype=self.dtype)
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 4)
+        h, hkv = self.num_heads, self.num_kv_heads
+        p: Params = {
+            "wq": self._dense(self.d_model, self.q_dim, "col").init(ks[0]),
+            "wk": self._dense(self.d_model, self.kv_dim, "col").init(ks[1]),
+            "wv": self._dense(self.d_model, self.kv_dim, "col").init(ks[2]),
+            "wo": self._dense(self.q_dim, self.d_model,
+                              self.wo_partition).init(ks[3]),
+            # shared input binarization (one M1 pass feeds Q/K/V)
+            "act_alpha": jnp.ones((), jnp.float32),
+            "act_beta": jnp.zeros((), jnp.float32),
+            # per-head Q/K/V binarization scales
+            "q_alpha": jnp.ones((h,), jnp.float32),
+            "q_beta": jnp.zeros((h,), jnp.float32),
+            "k_alpha": jnp.ones((hkv,), jnp.float32),
+            "k_beta": jnp.zeros((hkv,), jnp.float32),
+            "v_alpha": jnp.ones((hkv,), jnp.float32),
+            "v_beta": jnp.zeros((hkv,), jnp.float32),
+            # context binarization (input to M4)
+            "ctx_alpha": jnp.ones((), jnp.float32),
+            "ctx_beta": jnp.zeros((), jnp.float32),
+            "sps_lambda": self._init_lambda(),
+            # BiT teacher's elastic prob scale (bit_softmax mode only)
+            "bit_alpha": 0.5 * jnp.ones((h,), jnp.float32),
+        }
+        return p
+
+    def _init_lambda(self) -> Array:
+        if self.sps_granularity == "layer":
+            return jnp.zeros((), jnp.float32)
+        if self.sps_granularity == "head":
+            return jnp.zeros((self.num_heads,), jnp.float32)
+        return jnp.zeros((self.num_heads, ROW_TABLE), jnp.float32)
+
+    def specs(self) -> Params:
+        # per-head scale/threshold vectors are tiny (H floats) — replicated;
+        # head counts (9, 25, ...) need not divide the model axis.
+        lam_spec = {"layer": P(), "head": P(None),
+                    "row": P(None, None)}[self.sps_granularity]
+        return {
+            "wq": self._dense(self.d_model, self.q_dim, "col").specs(),
+            "wk": self._dense(self.d_model, self.kv_dim, "col").specs(),
+            "wv": self._dense(self.d_model, self.kv_dim, "col").specs(),
+            "wo": self._dense(self.q_dim, self.d_model,
+                              self.wo_partition).specs(),
+            "act_alpha": P(), "act_beta": P(),
+            "q_alpha": P(None), "q_beta": P(None),
+            "k_alpha": P(None), "k_beta": P(None),
+            "v_alpha": P(None), "v_beta": P(None),
+            "ctx_alpha": P(), "ctx_beta": P(),
+            "sps_lambda": lam_spec,
+            "bit_alpha": P(None),
+        }
+
+    # -- shared helpers ------------------------------------------------------
+
+    def _lambda_for_rows(self, lam: Array, row_idx: Array) -> Array:
+        """Resolve the SPS threshold for a block of query rows.
+        Returns shape broadcastable to (H, rows, cols)."""
+        if self.sps_granularity == "layer":
+            return lam[None, None, None]
+        if self.sps_granularity == "head":
+            return lam[:, None, None]
+        idx = jnp.clip(row_idx, 0, ROW_TABLE - 1)
+        return lam[:, idx][:, :, None]          # (H, rows, 1)
+
+    def _mask(self, row_idx: Array, col_idx: Array, kv_len,
+              window) -> Array:
+        """(rows, cols) bool validity mask.  kv_len/window may be traced."""
+        r = row_idx[:, None]
+        c = col_idx[None, :]
+        m = c < kv_len
+        if self.causal and not self.cross:
+            m = m & (c <= r)
+            if window is not None:
+                m = m & (c > r - window)
+        return m
+
+    def _repeat_kv(self, x: Array) -> Array:
+        """(B, Hkv, ...) -> (B, H, ...)."""
+        if self.groups == 1:
+            return x
+        return jnp.repeat(x, self.groups, axis=1)
+
+    # -- QAT face --------------------------------------------------------------
+
+    def qat(self, params: Params, x: Array, *,
+            memory: Optional[Array] = None,
+            positions: Optional[Array] = None,
+            window=None, kv_len=None,
+            collect_scores: bool = False
+            ) -> Tuple[Array, Dict[str, Array]]:
+        """x: (B, S, d).  memory: (B, Skv, d) for cross-attention.
+        Returns (out (B, S, d), aux)."""
+        b, s, _ = x.shape
+        h, hkv, dh = self.num_heads, self.num_kv_heads, self.head_dim
+        xkv = memory if self.cross else x
+        skv = xkv.shape[1]
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+
+        alpha = jnp.maximum(params["act_alpha"], 1e-6)
+        s_x = binarize.sign_ste((x - params["act_beta"]) / alpha)
+        if self.cross:
+            s_kv = binarize.sign_ste((xkv - params["act_beta"]) / alpha)
+        else:
+            s_kv = s_x
+
+        wq = self._dense(self.d_model, self.q_dim, "col")
+        wk = self._dense(self.d_model, self.kv_dim, "col")
+        wv = self._dense(self.d_model, self.kv_dim, "col")
+        wo = self._dense(self.q_dim, self.d_model, self.wo_partition)
+        q = wq.apply(params["wq"], act_values=s_x, act_scale=alpha)
+        k = wk.apply(params["wk"], act_values=s_kv, act_scale=alpha)
+        v = wv.apply(params["wv"], act_values=s_kv, act_scale=alpha)
+        q = q.reshape(b, s, h, dh)
+        k = k.reshape(b, skv, hkv, dh)
+        v = v.reshape(b, skv, hkv, dh)
+        if self.use_rope and not self.cross:
+            q = rope(q, positions, self.rope_theta)
+            k = rope(k, positions[:, :skv] if positions.shape[1] >= skv
+                     else jnp.arange(skv)[None, :], self.rope_theta)
+
+        # per-head binarization -> +-1 value tensors (B, H*, S, dh)
+        def headwise_sign(t, alpha_h, beta_h):
+            t = jnp.swapaxes(t, 1, 2)  # (B, H*, S, dh)
+            z = (t - beta_h[None, :, None, None]) / \
+                jnp.maximum(alpha_h[None, :, None, None], 1e-6)
+            return binarize.sign_ste(z)
+
+        s_q = headwise_sign(q, params["q_alpha"], params["q_beta"])
+        s_k = headwise_sign(k, params["k_alpha"], params["k_beta"])
+        s_v = headwise_sign(v, params["v_alpha"], params["v_beta"])
+        s_k = self._repeat_kv(s_k)
+        s_v = self._repeat_kv(s_v)
+        scale_qk = (params["q_alpha"][:, None, None] *
+                    self._repeat_kv(params["k_alpha"][None])[0][:, None, None]
+                    / math.sqrt(dh))
+
+        kv_len_ = skv if kv_len is None else kv_len
+        lam_all = params["sps_lambda"]
+        bit_alpha = params["bit_alpha"]
+        mode = self.attn_mode
+        aux: Dict[str, Array] = {}
+
+        nchunk = max(1, -(-s // self.q_chunk))
+        pad = nchunk * self.q_chunk - s
+        s_qp = jnp.pad(s_q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        row_idx_all = jnp.arange(nchunk * self.q_chunk)
+        col_idx = jnp.arange(skv)
+
+        # static-window fast path: each q-chunk only touches a
+        # (window + chunk)-wide K/V slice — SWA prefill drops from O(S^2)
+        # to O(S*W) compute AND traffic (beyond-paper; gemma's traced
+        # per-layer windows stay on the dense path)
+        kwin = 0
+        if (self.window_chunk and isinstance(window, int) and window
+                and self.causal and not self.cross and not collect_scores
+                and window + self.q_chunk < skv):
+            kwin = window + self.q_chunk
+
+        def chunk_body(args):
+            s_q_c, rows = args        # (B, H, C, dh), (C,)
+            if kwin:
+                start = jnp.clip(rows[0] - window, 0, skv - kwin)
+                s_k_c = lax.dynamic_slice_in_dim(s_k, start, kwin, axis=2)
+                s_v_c = lax.dynamic_slice_in_dim(s_v, start, kwin, axis=2)
+                cols = start + jnp.arange(kwin)
+            else:
+                s_k_c, s_v_c, cols = s_k, s_v, col_idx
+            z_int = jnp.einsum("bhcd,bhkd->bhck", s_q_c, s_k_c,
+                               preferred_element_type=jnp.float32)
+            z = z_int * scale_qk[None]
+            m = self._mask(rows, cols, kv_len_, window)[None, None]
+            if mode == "bit_softmax":
+                zm = jnp.where(m, z, -jnp.inf)
+                p = jax.nn.softmax(zm, axis=-1)
+                zp = p / jnp.maximum(bit_alpha[None, :, None, None], 1e-6)
+                probs = jnp.clip(binarize.round_ste(zp), 0.0, 1.0)
+                probs = jnp.where(m, probs, 0.0)
+            else:
+                lam = self._lambda_for_rows(lam_all, rows)[None]
+                probs = sps.sps_ste(z, lam)
+                probs = jnp.where(m, probs, 0.0)
+            ctx = jnp.einsum("bhck,bhkd->bhcd", probs, s_v_c,
+                             preferred_element_type=jnp.float32)
+            if collect_scores:
+                return ctx, (z, probs)
+            return ctx, ()
+
+        chunks_q = s_qp.reshape(b, h, nchunk, self.q_chunk, dh)
+        chunks_q = jnp.moveaxis(chunks_q, 2, 0)       # (n, B, H, C, dh)
+        rows = row_idx_all.reshape(nchunk, self.q_chunk)
+        ctx, extras = lax.map(chunk_body, (chunks_q, rows))
+        ctx = jnp.moveaxis(ctx, 0, 2).reshape(b, h, nchunk * self.q_chunk, dh)
+        ctx = ctx[:, :, :s]
+        if collect_scores:
+            z_all = jnp.moveaxis(extras[0], 0, 2)
+            z_all = z_all.reshape(b, h, -1, skv)[:, :, :s]
+            p_all = jnp.moveaxis(extras[1], 0, 2)
+            p_all = p_all.reshape(b, h, -1, skv)[:, :, :s]
+            aux["scores"] = z_all
+            aux["probs"] = p_all
+
+        # context scale: alpha_v per kv head, broadcast to q heads
+        av = self._repeat_kv(params["v_alpha"][None])[0]
+        ctx = ctx * av[None, :, None, None]
+        # binarize context (signed) -> M4
+        ca = jnp.maximum(params["ctx_alpha"], 1e-6)
+        s_c = binarize.sign_ste((ctx - params["ctx_beta"]) / ca)
+        s_c = jnp.swapaxes(s_c, 1, 2).reshape(b, s, self.q_dim)
+        out = wo.apply(params["wo"], act_values=s_c,
+                       act_scale=params["ctx_alpha"])
+        return out, aux
+
+    # -- deploy: conversion ----------------------------------------------------
+
+    def convert(self, params: Params) -> Params:
+        d: Params = {}
+        for name, io in (("wq", (self.d_model, self.q_dim, "col")),
+                         ("wk", (self.d_model, self.kv_dim, "col")),
+                         ("wv", (self.d_model, self.kv_dim, "col")),
+                         ("wo", (self.q_dim, self.d_model,
+                                 self.wo_partition))):
+            d[name] = self._dense(*io).convert(params[name])
+        for k in ("act_alpha", "act_beta", "q_alpha", "q_beta", "k_alpha",
+                  "k_beta", "v_alpha", "v_beta", "ctx_alpha", "ctx_beta",
+                  "sps_lambda"):
+            d[k] = params[k]
+        return d
+
+    def deploy_specs(self) -> Params:
+        d: Params = {}
+        for name, io in (("wq", (self.d_model, self.q_dim, "col")),
+                         ("wk", (self.d_model, self.kv_dim, "col")),
+                         ("wv", (self.d_model, self.kv_dim, "col")),
+                         ("wo", (self.q_dim, self.d_model,
+                                 self.wo_partition))):
+            d[name] = self._dense(*io).deploy_specs()
+        for k in ("act_alpha", "act_beta", "ctx_alpha", "ctx_beta"):
+            d[k] = P()
+        for k in ("q_alpha", "q_beta", "k_alpha", "k_beta", "v_alpha",
+                  "v_beta"):
+            d[k] = P(None)
+        d["sps_lambda"] = {"layer": P(), "head": P(None),
+                           "row": P(None, None)}[self.sps_granularity]
+        return d
+
+    # -- deploy shared pieces ----------------------------------------------
+
+    def _theta_int(self, params: Params) -> Array:
+        """Integer SPS thresholds per q-head (or per head-row table)."""
+        ak = self._repeat_kv(params["k_alpha"][None])[0]      # (H,)
+        scale = (params["q_alpha"] * ak) / math.sqrt(self.head_dim)
+        lam = params["sps_lambda"]
+        if self.sps_granularity == "layer":
+            lam = jnp.broadcast_to(lam, (self.num_heads,))
+        if self.sps_granularity == "row":
+            return jnp.ceil(lam / jnp.maximum(scale[:, None], 1e-12)
+                            ).astype(jnp.int32)               # (H, ROW_TABLE)
+        return jnp.ceil(lam / jnp.maximum(scale, 1e-12)).astype(jnp.int32)
+
+    def _theta_rows(self, theta: Array, row_idx: Array) -> Array:
+        """Threshold block for query rows -> (H, rows, 1)."""
+        if self.sps_granularity == "row":
+            idx = jnp.clip(row_idx, 0, ROW_TABLE - 1)
+            return theta[:, idx][:, :, None]
+        return theta[:, None, None]
+
+    def _project_qkv_deploy(self, params: Params, x: Array, positions: Array
+                            ) -> Tuple[Array, Array, Array]:
+        """x (B,S,d) -> packed per-head bits:
+        q_bits (B,H,S,dhp), k_bits (B,Hkv,S,dhp), s_v values (B,Hkv,S,dh)."""
+        b, s, _ = x.shape
+        h, hkv, dh = self.num_heads, self.num_kv_heads, self.head_dim
+        wq = self._dense(self.d_model, self.q_dim, "col")
+        wk = self._dense(self.d_model, self.kv_dim, "col")
+        wv = self._dense(self.d_model, self.kv_dim, "col")
+        bits_x = packing.pack_bits((x >= params["act_beta"]).astype(jnp.uint32))
+        alpha = params["act_alpha"]
+        q = wq.apply_deploy(params["wq"], bits=bits_x, act_alpha=alpha,
+                            impl=self.impl).reshape(b, s, h, dh)
+        k = wv_k = wk.apply_deploy(params["wk"], bits=bits_x, act_alpha=alpha,
+                                   impl=self.impl).reshape(b, s, hkv, dh)
+        v = wv.apply_deploy(params["wv"], bits=bits_x, act_alpha=alpha,
+                            impl=self.impl).reshape(b, s, hkv, dh)
+        del wv_k
+        if self.use_rope and not self.cross:
+            q = rope(q, positions, self.rope_theta)
+            k = rope(k, positions, self.rope_theta)
+        # per-head binarize + pack (the data-packing conversion unit)
+        qh = jnp.swapaxes(q, 1, 2)
+        kh = jnp.swapaxes(k, 1, 2)
+        vh = jnp.swapaxes(v, 1, 2)
+        q_bits = packing.pack_bits(
+            (qh >= params["q_beta"][None, :, None, None]).astype(jnp.uint32))
+        k_bits = packing.pack_bits(
+            (kh >= params["k_beta"][None, :, None, None]).astype(jnp.uint32))
+        s_v = jnp.where(vh >= params["v_beta"][None, :, None, None], 1.0, -1.0)
+        return q_bits, k_bits, s_v
+
+    def _context_scale_heads(self, params: Params) -> Array:
+        return self._repeat_kv(params["v_alpha"][None])[0]    # (H,)
+
+    def _output_deploy(self, params: Params, ctx_int: Array) -> Array:
+        """ctx_int (B, H, S, dh) int32 -> wo -> (B, S, d) fp."""
+        b, h, s, dh = ctx_int.shape
+        av = self._context_scale_heads(params)
+        ctx = ctx_int.astype(jnp.float32) * av[None, :, None, None]
+        s_c_bits = (ctx >= params["ctx_beta"]).astype(jnp.uint32)
+        s_c_bits = jnp.swapaxes(s_c_bits, 1, 2).reshape(b, s, self.q_dim)
+        wo = self._dense(self.q_dim, self.d_model, self.wo_partition)
+        return wo.apply_deploy(params["wo"],
+                               bits=packing.pack_bits(s_c_bits),
+                               act_alpha=params["ctx_alpha"], impl=self.impl)
+
+    # -- deploy: prefill -----------------------------------------------------
+
+    def deploy_prefill(self, params: Params, x: Array, *,
+                       memory: Optional[Array] = None,
+                       positions: Optional[Array] = None,
+                       window=None,
+                       cache_size: int = 0
+                       ) -> Tuple[Array, Optional[KVCache]]:
+        """Full-sequence deploy forward.  Returns (out, cache) — cache built
+        when cache_size > 0 (ring size W = cache_size)."""
+        b, s, _ = x.shape
+        h, hkv, dh = self.num_heads, self.num_kv_heads, self.head_dim
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        src = memory if self.cross else x
+        if self.cross:
+            # project memory with the same shared binarization
+            q_bits, _, _ = self._project_qkv_deploy(params, x, positions)
+            _, k_bits, s_v = self._project_qkv_deploy(params, src, positions)
+        else:
+            q_bits, k_bits, s_v = self._project_qkv_deploy(params, x,
+                                                           positions)
+        skv = src.shape[1]
+        k_bits_h = self._repeat_kv(k_bits)
+        s_v_h = self._repeat_kv(s_v)
+        theta = self._theta_int(params)
+
+        nchunk = max(1, -(-s // self.q_chunk))
+        pad = nchunk * self.q_chunk - s
+        q_p = jnp.pad(q_bits, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        rows_all = jnp.arange(nchunk * self.q_chunk)
+        col_idx = jnp.arange(skv)
+
+        # static-window fast path (see qat face): O(S*W) instead of O(S^2)
+        kwin = 0
+        if (self.window_chunk and isinstance(window, int) and window
+                and self.causal and not self.cross
+                and window + self.q_chunk < skv):
+            kwin = window + self.q_chunk
+
+        def chunk_body(args):
+            q_c, rows = args                     # (B,H,C,dhp), (C,)
+            if kwin:
+                start = jnp.clip(rows[0] - window, 0, skv - kwin)
+                k_c = lax.dynamic_slice_in_dim(k_bits_h, start, kwin, axis=2)
+                v_c = lax.dynamic_slice_in_dim(s_v_h, start, kwin, axis=2)
+                cols = start + jnp.arange(kwin)
+            else:
+                k_c, v_c, cols = k_bits_h, s_v_h, col_idx
+            c = rbmm.rbmm_int(q_c, k_c, dh, scheme="xnor",
+                              impl=self.impl)    # (B,H,C,Kwin) int32
+            th = self._theta_rows(theta, rows)[None]
+            probs = (c >= th).astype(jnp.int32)
+            m = self._mask(rows, cols, skv, window)[None, None]
+            probs = jnp.where(m, probs, 0)
+            ctx = jnp.einsum("bhck,bhkd->bhcd", probs.astype(jnp.float32),
+                             v_c, preferred_element_type=jnp.float32)
+            return ctx.astype(jnp.int32)
+
+        chunks_q = q_p.reshape(b, h, nchunk, self.q_chunk, -1)
+        chunks_q = jnp.moveaxis(chunks_q, 2, 0)
+        rows = rows_all.reshape(nchunk, self.q_chunk)
+        ctx = lax.map(chunk_body, (chunks_q, rows))
+        ctx = jnp.moveaxis(ctx, 0, 2).reshape(b, h, -1, dh)[:, :, :s]
+
+        out = self._output_deploy(params, ctx)
+
+        cache = None
+        if cache_size:
+            w = cache_size
+            kc = jnp.zeros((b, hkv, w, packing.packed_len(dh)), jnp.uint32)
+            vc = jnp.zeros((b, hkv, dh, packing.packed_len(w)), jnp.uint32)
+            take = min(s, w)
+            # last `take` tokens land at ring slots (t % w)
+            t_idx = positions[0, s - take:] if positions.ndim == 2 else \
+                jnp.arange(s - take, s)
+            slots = (t_idx % w).astype(jnp.int32)
+            kc = kc.at[:, :, slots].set(k_bits[:, :, s - take:])
+            v_bits_tail = (s_v[:, :, s - take:] > 0).astype(jnp.uint32)
+            # scatter V bits into (dh, W/32) words
+            word = slots // packing.WORD
+            off = (slots % packing.WORD).astype(jnp.uint32)
+            vt = jnp.swapaxes(v_bits_tail, 2, 3)          # (B,Hkv,dh,take)
+            contrib = (vt << off[None, None, None, :]).astype(jnp.uint32)
+            # accumulate words by segment-sum over `word` (slots unique -> OR
+            # == sum, so a plain einsum over a one-hot word map is exact)
+            nwords = packing.packed_len(w)
+            onehot = (word[:, None] == jnp.arange(nwords)[None, :]
+                      ).astype(jnp.uint32)
+            vc = jnp.einsum("bhdt,tw->bhdw", contrib, onehot).astype(
+                jnp.uint32)
+            cache = KVCache(kc, vc, jnp.asarray(min(s, 2**31 - 1), jnp.int32))
+        return out, cache
+
+    # -- deploy: cross-attention memory ---------------------------------------
+
+    def build_memory_cache(self, params: Params, memory: Array) -> KVCache:
+        """Project encoder output once into binary K / V^T caches (cross)."""
+        b, s, _ = memory.shape
+        positions = jnp.arange(s)[None, :]
+        _, k_bits, s_v = self._project_qkv_deploy(params, memory, positions)
+        vt = packing.pack_bits(
+            (jnp.swapaxes(s_v, 2, 3) > 0).astype(jnp.uint32))
+        return KVCache(k_bits, vt, jnp.asarray(s, jnp.int32))
+
+    def attend_memory(self, params: Params, x: Array, mem: KVCache) -> Array:
+        """Cross-attention of x (B, S, d) over a static memory cache
+        (read-only; no causal mask).  Fully binary score+context path."""
+        b, s, _ = x.shape
+        h, dh = self.num_heads, self.head_dim
+        positions = jnp.arange(s)[None, :]
+        q_bits, _, _ = self._project_qkv_deploy(params, x, positions)
+        kc_h = self._repeat_kv(mem.k_bits)
+        c = rbmm.rbmm_int(q_bits, kc_h, dh, scheme="xnor", impl=self.impl)
+        theta = self._theta_int(params)
+        if self.sps_granularity == "row":
+            th = self._theta_rows(theta, jnp.clip(positions[0], 0,
+                                                  ROW_TABLE - 1))[None]
+        else:
+            th = theta[None, :, None, None]
+        probs = (c >= th).astype(jnp.uint32)
+        skv = mem.k_bits.shape[2]
+        valid = (jnp.arange(skv) < mem.length)[None, None, None, :]
+        probs = jnp.where(valid, probs, jnp.uint32(0))
+        probs_p = packing.pack_bits(probs)
+        vc_h = self._repeat_kv(mem.vt_bits)
+        pc = lax.population_count(
+            probs_p[:, :, :, None, :] & vc_h[:, :, None, :, :]
+        ).astype(jnp.int32).sum(-1)
+        nnz = probs.sum(-1, dtype=jnp.int32)
+        ctx_int = 2 * pc - nnz[..., None]                     # (B,H,S,dh)
+        return self._output_deploy(params, ctx_int)
+
+    # -- deploy: decode --------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int) -> KVCache:
+        hkv, dh = self.num_kv_heads, self.head_dim
+        return KVCache(
+            jnp.zeros((batch, hkv, max_len, packing.packed_len(dh)),
+                      jnp.uint32),
+            jnp.zeros((batch, hkv, dh, packing.packed_len(max_len)),
+                      jnp.uint32),
+            jnp.zeros((), jnp.int32),
+        )
+
+    def deploy_decode(self, params: Params, x: Array, cache: KVCache, *,
+                      window=None) -> Tuple[Array, KVCache]:
+        """x: (B, 1, d) one new token; cache ring size W.
+        Fully binary score+context path (Eq. 7 xnor then and_dc)."""
+        b, _, _ = x.shape
+        h, hkv, dh = self.num_heads, self.num_kv_heads, self.head_dim
+        w = cache.k_bits.shape[2]
+        pos = cache.length                      # tokens so far; this is token pos
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        q_bits, k_bits_new, s_v_new = self._project_qkv_deploy(
+            params, x, positions)               # (B,H,1,dhp), (B,Hkv,1,dhp)
+
+        slot = (pos % w).astype(jnp.int32)
+        kc = lax.dynamic_update_slice_in_dim(
+            cache.k_bits, k_bits_new, slot, axis=2)
+        # V^T ring update: set bit (slot % 32) of word (slot // 32)
+        word_i = slot // packing.WORD
+        off = (slot % packing.WORD).astype(jnp.uint32)
+        v_bit = (s_v_new[:, :, 0] > 0).astype(jnp.uint32)     # (B,Hkv,dh)
+        old = lax.dynamic_slice_in_dim(cache.vt_bits, word_i, 1, axis=3)
+        mask_bit = jnp.uint32(1) << off
+        new = (old[..., 0] & ~mask_bit) | (v_bit << off)
+        vc = lax.dynamic_update_slice_in_dim(
+            cache.vt_bits, new[..., None], word_i, axis=3)
+
+        # scores over the whole ring
+        if self.grouped_decode and self.groups > 1:
+            g = self.groups
+            qg = q_bits[:, :, 0].reshape(b, hkv, g, -1)       # (B,Hkv,G,dhp)
+            x = ~(qg[:, :, :, None, :] ^ kc[:, :, None, :, :])
+            pc = lax.population_count(x).astype(jnp.int32).sum(-1)
+            c = (2 * pc - jnp.int32(dh)).reshape(b, h, 1, w)  # (B,H,1,W)
+        else:
+            kc_h = self._repeat_kv(kc)                        # (B,H,W,dhp)
+            c = rbmm.rbmm_int(q_bits, kc_h, dh, scheme="xnor",
+                              impl="popcount")                # (B,H,1,W)
+        theta = self._theta_int(params)
+        if self.sps_granularity == "row":
+            row = jnp.clip(pos, 0, ROW_TABLE - 1)
+            th = theta[:, row][None, :, None, None]
+        else:
+            th = theta[None, :, None, None]
+        probs = (c >= th).astype(jnp.uint32)
+        valid = (jnp.arange(w) <= pos)[None, None, None, :]
+        probs = jnp.where(valid, probs, jnp.uint32(0))
+        # pack probs along W -> and_dc against V^T (fully binary M3).
+        # `window` is enforced structurally: the ring size W == window for
+        # SWA archs, so evicted tokens are simply overwritten.
+        del window
+        probs_p = packing.pack_bits(probs)                    # (B,H,1,W/32)
+        nnz = probs.sum(-1, dtype=jnp.int32)                  # (B,H,1)
+        if self.grouped_decode and self.groups > 1:
+            g = self.groups
+            pg = probs_p[:, :, 0].reshape(b, hkv, g, -1)      # (B,Hkv,G,Wp)
+            x = pg[:, :, :, None, :] & vc[:, :, None, :, :]   # (B,Hkv,G,dh,Wp)
+            pc = lax.population_count(x).astype(jnp.int32).sum(-1)
+            pc = pc.reshape(b, h, 1, dh)
+        else:
+            vc_h = self._repeat_kv(vc)                        # (B,H,dh,W/32)
+            pc = lax.population_count(
+                probs_p[:, :, :, None, :] & vc_h[:, :, None, :, :]
+            ).astype(jnp.int32).sum(-1)                       # (B,H,1,dh)
+        ctx_int = 2 * pc - nnz[..., None]
+        out = self._output_deploy(params, ctx_int)
+        return out, KVCache(kc, vc, pos + 1)

@@ -1,0 +1,293 @@
+"""Transformer block composition: standard, hybrid (attn || mamba), xLSTM
+cells, and enc-dec decoder blocks — each with QAT / deploy-prefill /
+deploy-decode faces and matching param/spec/convert plumbing.
+
+Residual stream stays fp (BiT convention; the paper's integer M4/F2 outputs
+are dequantized before LayerNorm exactly like this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models.attention import KVCache, SPSAttention
+from repro.models.ffn import BinaryFFN, BinaryMoE
+from repro.models.sharding import constrain
+from repro.models.ssm import (MambaBlock, MLSTMBlock, SLSTMBlock, MambaCache,
+                              XLSTMCache)
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _attn_from_cfg(cfg: ModelConfig, *, cross: bool = False,
+                   causal: Optional[bool] = None) -> SPSAttention:
+    return SPSAttention(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads if not cross else cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        causal=cfg.causal if causal is None else causal,
+        use_rope=cfg.rope_theta > 0 and not cross,
+        rope_theta=cfg.rope_theta or 10_000.0,
+        qkv_bias=cfg.attn_bias,
+        sps_granularity=cfg.binary.sps_granularity,
+        attn_mode=cfg.binary.attn_mode,
+        cross=cross,
+        dtype=jnp.dtype(cfg.compute_dtype),
+        impl=cfg.binary.impl if cfg.binary.impl != "auto" else "auto",
+        grouped_decode=cfg.decode_grouped_gqa,
+        window_chunk=cfg.window_chunking,
+        wo_partition="col" if cfg.binary.gather_bits_collectives else "row",
+    )
+
+
+def _ffn_from_cfg(cfg: ModelConfig):
+    if cfg.moe.num_experts:
+        return BinaryMoE(
+            d_model=cfg.d_model, d_ff=cfg.d_ff,
+            num_experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+            dense_residual=cfg.moe.dense_residual,
+            act=cfg.act, glu=cfg.glu, dtype=jnp.dtype(cfg.compute_dtype),
+            impl=cfg.binary.impl,
+            expert_parallel=cfg.moe.num_experts >= 16,
+            w2_partition="col" if cfg.binary.gather_bits_collectives
+            else "row",
+            dispatch_bits=cfg.binary.moe_dispatch_bits)
+    return BinaryFFN(cfg.d_model, cfg.d_ff, act=cfg.act, glu=cfg.glu,
+                     blocked_r=cfg.binary.ffn_block_r,
+                     dtype=jnp.dtype(cfg.compute_dtype),
+                     impl=cfg.binary.impl,
+                     w2_partition="col" if
+                     cfg.binary.gather_bits_collectives else "row")
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """One decoder/encoder layer.  kind: attn | hybrid | mlstm | slstm | dec.
+
+    ``window``: this block's static attention window (0 = full attention);
+    sizes the decode ring cache and is the default mask window.  gemma-style
+    local:global stacks build Blocks that differ only in this static field —
+    their params stay scan-compatible (window enters scans as per-layer data).
+    """
+    cfg: ModelConfig
+    kind: str = "attn"
+    causal: Optional[bool] = None
+    window: int = 0
+
+    # -- submodules ----------------------------------------------------------
+
+    def _parts(self):
+        cfg = self.cfg
+        parts: Dict[str, Any] = {}
+        if self.kind in ("attn", "hybrid", "dec"):
+            parts["attn"] = _attn_from_cfg(cfg, causal=self.causal)
+        if self.kind == "dec":
+            parts["cross"] = _attn_from_cfg(cfg, cross=True)
+        if self.kind == "hybrid":
+            parts["mamba"] = MambaBlock(
+                cfg.d_model, state_size=cfg.ssm.state_size,
+                conv_width=cfg.ssm.conv_width, expand=cfg.ssm.expand,
+                dtype=jnp.dtype(cfg.compute_dtype), impl=cfg.binary.impl)
+        if self.kind == "mlstm":
+            parts["cell"] = MLSTMBlock(cfg.d_model, cfg.num_heads,
+                                       expand=cfg.ssm.expand,
+                                       dtype=jnp.dtype(cfg.compute_dtype))
+        if self.kind == "slstm":
+            parts["cell"] = SLSTMBlock(cfg.d_model, expand=cfg.ssm.expand,
+                                       dtype=jnp.dtype(cfg.compute_dtype))
+        if self.kind in ("attn", "hybrid", "dec") and cfg.d_ff:
+            parts["ffn"] = _ffn_from_cfg(cfg)
+        return parts
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        parts = self._parts()
+        ks = jax.random.split(key, len(parts))
+        p: Params = {}
+        for (name, mod), k in zip(sorted(parts.items()), ks):
+            p[name] = mod.init(k)
+        p["norm1"] = nn.make_norm(cfg.norm, cfg.d_model).init(None)
+        if "ffn" in parts:
+            p["norm2"] = nn.make_norm(cfg.norm, cfg.d_model).init(None)
+        if self.kind == "dec":
+            p["norm_x"] = nn.make_norm(cfg.norm, cfg.d_model).init(None)
+        return p
+
+    def specs(self, deploy: bool = False) -> Params:
+        cfg = self.cfg
+        parts = self._parts()
+        p: Params = {}
+        for name, mod in sorted(parts.items()):
+            if deploy and hasattr(mod, "deploy_specs"):
+                p[name] = mod.deploy_specs()
+            elif deploy and name in ("ffn", "mamba", "cell"):
+                p[name] = mod.specs(deploy=True)
+            else:
+                p[name] = mod.specs()
+        norm = nn.make_norm(cfg.norm, cfg.d_model)
+        p["norm1"] = norm.specs()
+        if "ffn" in parts:
+            p["norm2"] = norm.specs()
+        if self.kind == "dec":
+            p["norm_x"] = norm.specs()
+        return p
+
+    def convert(self, params: Params) -> Params:
+        parts = self._parts()
+        out: Params = {}
+        for name, mod in parts.items():
+            out[name] = mod.convert(params[name])
+        for name in ("norm1", "norm2", "norm_x"):
+            if name in params:
+                out[name] = params[name]
+        return out
+
+    # -- faces -----------------------------------------------------------------
+
+    def qat(self, params: Params, x: Array, *, positions=None, window=None,
+            memory: Optional[Array] = None, collect_scores: bool = False
+            ) -> Tuple[Array, Dict[str, Array]]:
+        cfg = self.cfg
+        parts = self._parts()
+        norm = nn.make_norm(cfg.norm, cfg.d_model)
+        aux: Dict[str, Array] = {}
+        if window is None and self.window:
+            window = self.window
+        h = norm.apply(params["norm1"], x)
+        h = constrain(h, "batch", None, None)
+        if self.kind in ("attn", "hybrid", "dec"):
+            a_out, a_aux = parts["attn"].qat(
+                params["attn"], h, positions=positions, window=window,
+                collect_scores=collect_scores)
+            aux.update({f"attn_{k}": v for k, v in a_aux.items()})
+            if self.kind == "hybrid":
+                m_out = parts["mamba"].apply(params["mamba"], h)
+                a_out = 0.5 * (a_out + m_out)
+            x = x + a_out
+            if self.kind == "dec":
+                hx = norm.apply(params["norm_x"], x)
+                c_out, _ = parts["cross"].qat(params["cross"], hx,
+                                              memory=memory)
+                x = x + c_out
+            if "ffn" in parts:
+                h2 = norm.apply(params["norm2"], x)
+                if isinstance(parts["ffn"], BinaryMoE):
+                    f_out, f_aux = parts["ffn"].apply(params["ffn"], h2)
+                    aux.update(f_aux)
+                else:
+                    f_out = parts["ffn"].apply(params["ffn"], h2)
+                x = x + f_out
+        else:  # mlstm / slstm
+            x = x + parts["cell"].apply(params["cell"], h)
+        return constrain(x, "batch", None, None), aux
+
+    def deploy_prefill(self, params: Params, x: Array, *, positions=None,
+                       window=None, memory: Optional[Array] = None,
+                       cache_size: int = 0
+                       ) -> Tuple[Array, Dict[str, Any]]:
+        cfg = self.cfg
+        parts = self._parts()
+        norm = nn.make_norm(cfg.norm, cfg.d_model)
+        cache: Dict[str, Any] = {}
+        h = norm.apply(params["norm1"], x)
+        h = constrain(h, "batch", None, None)
+        if window is None and self.window:
+            window = self.window
+        if self.kind in ("attn", "hybrid", "dec"):
+            a_out, kv = parts["attn"].deploy_prefill(
+                params["attn"], h, positions=positions, window=window,
+                cache_size=cache_size)
+            if kv is not None:
+                cache["attn"] = kv
+            if self.kind == "hybrid":
+                if cache_size:
+                    m_out, mc = parts["mamba"].apply(
+                        params["mamba"], h, deploy=True, return_state=True)
+                    cache["mamba"] = mc
+                else:
+                    m_out = parts["mamba"].apply(params["mamba"], h,
+                                                 deploy=True)
+                a_out = 0.5 * (a_out + m_out)
+            x = x + a_out
+            if self.kind == "dec":
+                hx = norm.apply(params["norm_x"], x)
+                mem_cache = parts["cross"].build_memory_cache(
+                    params["cross"], memory)
+                c_out = parts["cross"].attend_memory(params["cross"], hx,
+                                                     mem_cache)
+                x = x + c_out
+                if cache_size:
+                    cache["cross"] = mem_cache
+            if "ffn" in parts:
+                h2 = norm.apply(params["norm2"], x)
+                f_out = parts["ffn"].apply_deploy(params["ffn"], h2)
+                x = x + f_out
+        else:
+            if cache_size:
+                out, cc = parts["cell"].apply(params["cell"], h, deploy=True,
+                                              return_state=True)
+                cache["cell"] = cc
+            else:
+                out = parts["cell"].apply(params["cell"], h, deploy=True)
+            x = x + out
+        return constrain(x, "batch", None, None), cache
+
+    def init_cache(self, batch: int, max_len: int,
+                   memory_len: int = 0) -> Dict[str, Any]:
+        parts = self._parts()
+        cache: Dict[str, Any] = {}
+        if "attn" in parts:
+            w = self.window or max_len
+            cache["attn"] = parts["attn"].init_cache(batch, min(w, max_len))
+        if self.kind == "dec":
+            cache["cross"] = parts["cross"].init_cache(batch,
+                                                       memory_len or 1)
+        if self.kind == "hybrid":
+            cache["mamba"] = parts["mamba"].init_cache(batch)
+        if self.kind in ("mlstm", "slstm"):
+            cache["cell"] = parts["cell"].init_cache(batch)
+        return cache
+
+    def deploy_decode(self, params: Params, x: Array,
+                      cache: Dict[str, Any], *,
+                      memory: Optional[Array] = None
+                      ) -> Tuple[Array, Dict[str, Any]]:
+        cfg = self.cfg
+        parts = self._parts()
+        norm = nn.make_norm(cfg.norm, cfg.d_model)
+        new_cache = dict(cache)
+        h = norm.apply(params["norm1"], x)
+        if self.kind in ("attn", "hybrid", "dec"):
+            a_out, kv = parts["attn"].deploy_decode(params["attn"], h,
+                                                    cache["attn"])
+            new_cache["attn"] = kv
+            if self.kind == "hybrid":
+                m_out, mc = parts["mamba"].decode_step(params["mamba"], h,
+                                                       cache["mamba"])
+                new_cache["mamba"] = mc
+                a_out = 0.5 * (a_out + m_out)
+            x = x + a_out
+            if self.kind == "dec":
+                hx = norm.apply(params["norm_x"], x)
+                c_out = parts["cross"].attend_memory(params["cross"], hx,
+                                                     cache["cross"])
+                x = x + c_out
+            if "ffn" in parts:
+                h2 = norm.apply(params["norm2"], x)
+                f_out = parts["ffn"].apply_deploy(params["ffn"], h2)
+                x = x + f_out
+        else:
+            out, cc = parts["cell"].decode_step(params["cell"], h,
+                                                cache["cell"])
+            new_cache["cell"] = cc
+            x = x + out
+        return x, new_cache

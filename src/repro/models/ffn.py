@@ -1,0 +1,423 @@
+"""Binary FFN variants + MoE (paper modes F1/F2, Eq. 11; COBRA applied to
+mixture-of-experts stacks).
+
+ReLU FFN (BERT-family — the paper's exact target):
+  F1: y1 = RBMM(x_bits, W1) with fused ReLU+unsigned binarization (Eq. 10)
+  F2: y2 = RBMM(h_bits {0,1}, W2) via the and_dc scheme with the DC RETURN
+  Optional Eq. 11 blocked execution (``blocked=True``): R chunks, two l x d
+  live buffers — on TPU this bounds the VMEM working set instead of BRAM.
+
+GLU FFN (llama-family archs): gate/up projections are binary RBMMs sharing
+one input binarization; the silu(u) * g elementwise stays fp (the honest
+analogue of the paper keeping LayerNorm fp — documented in DESIGN.md
+§Arch-applicability), then the product is unsigned-binarized and hits the
+binary down-projection (F2, and_dc).
+
+MoE: capacity-based scatter dispatch (MaxText-style, compile-friendly at
+32k x 128e scale), experts as stacked binary weights.  Experts shard over
+"model" when E >= tp size (EP), else the ff dim shards (TP-in-expert).
+Dispatch moves *packed* activations in deploy mode — router + gating stay fp
+(they are ~0.01% of FLOPs; the paper similarly keeps control paths fp).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import binarize, packing, rbmm
+from repro.models import nn
+from repro.models.linear import BinaryDense, act_bits_packed
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BinaryFFN:
+    d_model: int
+    d_ff: int
+    act: str = "silu"               # silu (GLU) | gelu (GLU) | relu (paper)
+    glu: bool = True
+    blocked_r: int = 0              # Eq. 11 R (relu path only); 0 = unblocked
+    dtype: Any = jnp.float32
+    impl: str = "auto"
+    # expert stacking: when > 0 all weights get a leading E axis and apply
+    # operates on (E, C, d) expert batches.
+    num_experts: int = 0
+    expert_parallel: bool = False   # shard E over "model" instead of ff
+    # "row" (contraction-sharded, all-reduce of f32 partials) or "col"
+    # (output-sharded, all-gather of packed activation bits — 32x less wire)
+    w2_partition: str = "row"
+    # deploy entry may receive pre-packed activation bits (MoE bit-dispatch)
+    # instead of fp x — see BinaryMoE.dispatch_bits
+
+    def _w1(self):
+        return BinaryDense(self.d_model, self.d_ff, partition="col",
+                           external_act=True, dtype=self.dtype)
+
+    def _w2(self):
+        return BinaryDense(self.d_ff, self.d_model,
+                           partition=self.w2_partition,
+                           external_act=True, dtype=self.dtype)
+
+    def init(self, key) -> Params:
+        def one(k):
+            kk = jax.random.split(k, 3)
+            p: Params = {"w1": self._w1().init(kk[0]),
+                         "w2": self._w2().init(kk[1])}
+            if self.glu:
+                p["w3"] = self._w1().init(kk[2])
+            return p
+
+        if self.num_experts:
+            p = nn.stack_init(one, key, self.num_experts)
+        else:
+            p = one(key)
+        # activation scales are shared across experts (one binarization unit
+        # in hardware; also keeps the dispatch of packed bits expert-agnostic)
+        p["act_alpha"] = jnp.ones((), jnp.float32)
+        p["act_beta"] = jnp.zeros((), jnp.float32)
+        p["h_alpha"] = jnp.ones((), jnp.float32)
+        p["h_beta"] = jnp.zeros((), jnp.float32)
+        return p
+
+    def _expert_axes(self, base: P) -> P:
+        if not self.num_experts:
+            return base
+        if self.expert_parallel:
+            return P("model", *(None,) * len(base))
+        return P(None, *base)
+
+    def specs(self, deploy: bool = False) -> Params:
+        w1 = self._w1().deploy_specs() if deploy else self._w1().specs()
+        w2 = self._w2().deploy_specs() if deploy else self._w2().specs()
+        if self.num_experts and self.expert_parallel:
+            fix = lambda t: jax.tree.map(
+                lambda s: P("model", *(None,) * len(s)), t,
+                is_leaf=lambda x: isinstance(x, P))
+        elif self.num_experts:
+            fix = lambda t: jax.tree.map(
+                lambda s: P(None, *s), t, is_leaf=lambda x: isinstance(x, P))
+        else:
+            fix = lambda t: t
+        p: Params = {"w1": fix(w1), "w2": fix(w2)}
+        if self.glu:
+            p["w3"] = fix(w1)
+        for k in ("act_alpha", "act_beta", "h_alpha", "h_beta"):
+            p[k] = P()
+        return p
+
+    # -- QAT -----------------------------------------------------------------
+
+    def _act_fn(self, u: Array) -> Array:
+        if self.act == "relu":
+            return jax.nn.relu(u)
+        if self.act == "gelu":
+            return jax.nn.gelu(u)
+        return jax.nn.silu(u)
+
+    def apply(self, params: Params, x: Array) -> Array:
+        """QAT forward.  x: (..., d) — or (E, C, d) when expert-stacked
+        (weights then carry a leading E axis and einsum is batched)."""
+        alpha = jnp.maximum(params["act_alpha"], 1e-6)
+        s_x = binarize.sign_ste((x - params["act_beta"]) / alpha)
+
+        def mm(wp, a, a_scale):
+            wb = binarize.sign_ste(wp["w_latent"])
+            if self.num_experts:
+                y = jnp.einsum("e...k,ekp->e...p", a.astype(self.dtype),
+                               wb.astype(self.dtype),
+                               preferred_element_type=jnp.float32)
+                y = y * wp["alpha_w"][:, None, :]
+            else:
+                y = jnp.einsum("...k,kp->...p", a.astype(self.dtype),
+                               wb.astype(self.dtype),
+                               preferred_element_type=jnp.float32)
+                y = y * wp["alpha_w"]
+            return y * jnp.asarray(a_scale, jnp.float32)
+
+        u = mm(params["w1"], s_x, params["act_alpha"])
+        if self.glu:
+            g = mm(params["w3"], s_x, params["act_alpha"])
+            h = self._act_fn(u) * g
+        else:
+            h = self._act_fn(u)
+        ha = jnp.maximum(params["h_alpha"], 1e-6)
+        h_vals = jnp.clip(binarize.round_ste((h - params["h_beta"]) / ha),
+                          0.0, 1.0)
+        return mm(params["w2"], h_vals, params["h_alpha"]).astype(self.dtype)
+
+    # -- deploy ----------------------------------------------------------------
+
+    def convert(self, params: Params) -> Params:
+        def conv(layer, wp):
+            if self.num_experts:
+                return jax.vmap(layer.convert)(wp)
+            return layer.convert(wp)
+
+        d: Params = {"w1": conv(self._w1(), params["w1"]),
+                     "w2": conv(self._w2(), params["w2"])}
+        if self.glu:
+            d["w3"] = conv(self._w1(), params["w3"])
+        for k in ("act_alpha", "act_beta", "h_alpha", "h_beta"):
+            d[k] = params[k]
+        return d
+
+    def apply_deploy(self, params: Params, x: Optional[Array] = None, *,
+                     bits: Optional[Array] = None) -> Array:
+        """Deploy forward, fp in/out.  Fully binary matmul chain.
+        Either fp ``x`` (binarized here) or pre-packed ``bits``."""
+        if self.glu:
+            return self._deploy_glu(params, x, bits=bits)
+        if self.blocked_r:
+            assert bits is None
+            return self._deploy_relu_blocked(params, x)
+        return self._deploy_relu(params, x, bits=bits)
+
+    def _mm_int(self, wp, bits, k, scheme="xnor", dc=None):
+        """RBMM against (possibly expert-stacked) packed weights."""
+        if self.num_experts:
+            c = rbmm.rbmm_int(bits, wp["w_packed"], k, scheme=scheme, dc=dc,
+                              impl=self.impl)
+            scale = wp["alpha_w"][:, None, :]
+        else:
+            shape = bits.shape[:-1]
+            c = rbmm.rbmm_int(bits.reshape(-1, bits.shape[-1]),
+                              wp["w_packed"], k, scheme=scheme,
+                              dc=None if dc is None else dc.reshape(-1),
+                              impl=self.impl)
+            c = c.reshape(shape + (c.shape[-1],))
+            scale = wp["alpha_w"]
+        return c, scale
+
+    def _deploy_relu(self, params: Params, x: Optional[Array] = None, *,
+                     bits: Optional[Array] = None) -> Array:
+        """Unblocked F1 -> F2 with fused ReLU+unsigned threshold."""
+        w1 = self._w1()
+        if self.num_experts:
+            # expert-stacked: inline the fused math (vmapped convert layout)
+            if bits is None:
+                bits = act_bits_packed(x, params["act_beta"])
+            c, scale1 = self._mm_int(params["w1"], bits, self.d_model)
+            t = params["h_beta"] + 0.5 * params["h_alpha"]
+            theta = jnp.ceil(t / (params["act_alpha"] * scale1))
+            theta = jnp.where(t > 0, theta, -(self.d_model + 1))
+            h_bits_un = (c >= theta).astype(jnp.uint32)
+            dc = jnp.int32(self.d_ff) - h_bits_un.sum(-1, dtype=jnp.int32)
+            h_bits = packing.pack_bits(h_bits_un)
+        else:
+            assert bits is None
+            h_bits, dc = w1.apply_deploy_fused_unsigned(
+                params["w1"], x, params["h_alpha"], params["h_beta"],
+                relu=(self.act == "relu"), impl=self.impl,
+                act_alpha=params["act_alpha"], act_beta=params["act_beta"])
+        c2, scale2 = self._mm_int(params["w2"], h_bits, self.d_ff,
+                                  scheme="and_dc", dc=dc)
+        y = c2.astype(jnp.float32) * scale2 * params["h_alpha"]
+        return y.astype(self.dtype)
+
+    def _deploy_relu_blocked(self, params: Params, x: Array) -> Array:
+        """Eq. 11: R-chunked F1/F2 with two live l x d buffers."""
+        assert not self.num_experts
+        r = self.blocked_r
+        bits = act_bits_packed(x, params["act_beta"])
+        shape = bits.shape[:-1]
+        a2 = bits.reshape(-1, bits.shape[-1])
+        w1p = params["w1"]["w_packed"]                 # (FF, d/32)
+        w2p = params["w2"]["w_packed"]                 # (d, FF/32)
+        d_blk = self.d_ff // r
+        # theta1 per FF channel (fused ReLU+unsigned)
+        scale1 = jnp.maximum(params["act_alpha"] * params["w1"]["alpha_w"],
+                             1e-12)
+        t = params["h_beta"] + 0.5 * params["h_alpha"]
+        theta1 = jnp.where(t > 0, jnp.ceil(t / scale1),
+                           jnp.float32(-(self.d_model + 1)))
+        z = w2p.reshape(self.d_model, r, d_blk // packing.WORD)
+        z = jnp.swapaxes(z, 0, 1)                      # (R, d, d_blk/32)
+        c2 = rbmm.ffn_blocked(a2, w1p, z, self.d_model,
+                              theta1.astype(jnp.int32), r, impl="popcount")
+        c2 = c2.reshape(shape + (self.d_model,))
+        y = (c2.astype(jnp.float32) * params["w2"]["alpha_w"] *
+             params["h_alpha"])
+        return y.astype(self.dtype)
+
+    def _deploy_glu(self, params: Params, x: Optional[Array] = None, *,
+                    bits: Optional[Array] = None) -> Array:
+        if bits is None:
+            bits = act_bits_packed(x, params["act_beta"])
+        c_u, scale1 = self._mm_int(params["w1"], bits, self.d_model)
+        c_g, scale3 = self._mm_int(params["w3"], bits, self.d_model)
+        aa = params["act_alpha"]
+        u = c_u.astype(jnp.float32) * scale1 * aa
+        g = c_g.astype(jnp.float32) * scale3 * aa
+        h = self._act_fn(u) * g                        # fp elementwise
+        hb = (h >= params["h_beta"] + 0.5 * params["h_alpha"]
+              ).astype(jnp.uint32)
+        dc = jnp.int32(self.d_ff) - hb.sum(-1, dtype=jnp.int32)
+        h_bits = packing.pack_bits(hb)
+        c2, scale2 = self._mm_int(params["w2"], h_bits, self.d_ff,
+                                  scheme="and_dc", dc=dc)
+        y = c2.astype(jnp.float32) * scale2 * params["h_alpha"]
+        return y.astype(self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BinaryMoE:
+    d_model: int
+    d_ff: int
+    num_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    dense_residual: bool = False    # arctic: dense FFN in parallel
+    act: str = "silu"
+    glu: bool = True
+    dtype: Any = jnp.float32
+    impl: str = "auto"
+    expert_parallel: bool = True
+    router_dtype: Any = jnp.float32
+    w2_partition: str = "row"
+    # deploy: dispatch PACKED activation bits to expert buffers instead of
+    # fp rows — 32-128x smaller dispatch traffic (legal because act scales
+    # are shared across experts; beyond-paper §Perf optimization)
+    dispatch_bits: bool = False
+
+    def _experts(self) -> BinaryFFN:
+        return BinaryFFN(self.d_model, self.d_ff, act=self.act, glu=self.glu,
+                         dtype=self.dtype, impl=self.impl,
+                         num_experts=self.num_experts,
+                         expert_parallel=self.expert_parallel,
+                         w2_partition=self.w2_partition)
+
+    def _residual_ffn(self) -> BinaryFFN:
+        return BinaryFFN(self.d_model, self.d_ff, act=self.act, glu=self.glu,
+                         dtype=self.dtype, impl=self.impl,
+                         w2_partition=self.w2_partition)
+
+    def _router(self) -> nn.Dense:
+        return nn.Dense(self.d_model, self.num_experts, use_bias=False,
+                        dtype=self.router_dtype, partition="none")
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 3)
+        p: Params = {"router": self._router().init(ks[0]),
+                     "experts": self._experts().init(ks[1])}
+        if self.dense_residual:
+            p["residual"] = self._residual_ffn().init(ks[2])
+        return p
+
+    def specs(self, deploy: bool = False) -> Params:
+        p: Params = {"router": self._router().specs(),
+                     "experts": self._experts().specs(deploy)}
+        if self.dense_residual:
+            p["residual"] = self._residual_ffn().specs(deploy)
+        return p
+
+    def convert(self, params: Params) -> Params:
+        d: Params = {"router": params["router"],
+                     "experts": self._experts().convert(params["experts"])}
+        if self.dense_residual:
+            d["residual"] = self._residual_ffn().convert(params["residual"])
+        return d
+
+    # -- dispatch --------------------------------------------------------------
+
+    def _route(self, params: Params, x2: Array
+               ) -> Tuple[Array, Array, Array, Array, int]:
+        """x2: (N, d) -> (gates (N,k), expert_idx (N,k), slot (N,k),
+        keep (N,k), capacity)."""
+        n = x2.shape[0]
+        logits = self._router().apply(params["router"],
+                                      x2.astype(self.router_dtype))
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gates, idx = jax.lax.top_k(probs, self.top_k)          # (N, k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        capacity = int(max(1, math.ceil(
+            n * self.top_k * self.capacity_factor / self.num_experts)))
+        # position of each (token, k) among claims on its expert
+        flat_idx = idx.reshape(-1)                             # (N*k,)
+        onehot = jax.nn.one_hot(flat_idx, self.num_experts, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - 1                   # (N*k, E)
+        slot = jnp.take_along_axis(pos, flat_idx[:, None], axis=1)[:, 0]
+        slot = slot.reshape(n, self.top_k)
+        keep = slot < capacity
+        return gates, idx, slot, keep, capacity
+
+    def _aux_loss(self, params: Params, x2: Array) -> Array:
+        """Switch-style load-balance loss (fraction * prob per expert)."""
+        logits = self._router().apply(params["router"],
+                                      x2.astype(self.router_dtype))
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        top1 = jnp.argmax(probs, axis=-1)
+        frac = jnp.mean(jax.nn.one_hot(top1, self.num_experts), axis=0)
+        mean_prob = probs.mean(0)
+        return jnp.float32(self.num_experts) * jnp.sum(frac * mean_prob)
+
+    def _dispatch(self, x2, idx, slot, keep, capacity):
+        """Scatter token rows to (E, C, ...) expert buffers (fp or packed)."""
+        n, k = idx.shape
+        e_flat = idx.reshape(-1)
+        s_flat = jnp.where(keep.reshape(-1), slot.reshape(-1), capacity)
+        rows = jnp.repeat(x2, k, axis=0)                       # (N*k, ...)
+        buf = jnp.zeros((self.num_experts, capacity + 1) + x2.shape[1:],
+                        x2.dtype)
+        buf = buf.at[e_flat, s_flat].add(rows) if jnp.issubdtype(
+            x2.dtype, jnp.floating) else buf.at[e_flat, s_flat].max(rows)
+        return buf[:, :capacity]
+
+    def _combine(self, out_buf, gates, idx, slot, keep):
+        """Gather (E, C, d) expert outputs back to (N, d) with gating."""
+        n, k = idx.shape
+        e_flat = idx.reshape(-1)
+        s_flat = jnp.clip(slot.reshape(-1), 0, out_buf.shape[1] - 1)
+        got = out_buf[e_flat, s_flat].reshape(n, k, -1)        # (N, k, d)
+        w = (gates * keep.astype(gates.dtype))[:, :, None]
+        return (got * w).sum(1)
+
+    # -- faces -----------------------------------------------------------------
+
+    def apply(self, params: Params, x: Array
+              ) -> Tuple[Array, Dict[str, Array]]:
+        """QAT forward.  x: (..., d).  Returns (y, aux) with load-balance
+        loss in aux."""
+        shape = x.shape
+        x2 = x.reshape(-1, self.d_model)
+        gates, idx, slot, keep, cap = self._route(params, x2)
+        buf = self._dispatch(x2, idx, slot, keep, cap)         # (E, C, d)
+        out_buf = self._experts().apply(params["experts"], buf)
+        y = self._combine(out_buf, gates, idx, slot, keep)
+        if self.dense_residual:
+            y = y + self._residual_ffn().apply(params["residual"], x2)
+        aux = {"moe_aux_loss": self._aux_loss(params, x2)}
+        return y.reshape(shape).astype(self.dtype), aux
+
+    def apply_deploy(self, params: Params, x: Array) -> Array:
+        shape = x.shape
+        x2 = x.reshape(-1, self.d_model)
+        gates, idx, slot, keep, cap = self._route(params, x2)
+        if self.dispatch_bits:
+            bits2 = act_bits_packed(x2, params["experts"]["act_beta"])
+            buf_bits = self._dispatch(bits2, idx, slot, keep, cap)
+            out_buf = self._experts().apply_deploy(params["experts"],
+                                                   bits=buf_bits)
+        else:
+            buf = self._dispatch(x2, idx, slot, keep, cap)
+            out_buf = self._experts().apply_deploy(params["experts"], buf)
+        y = self._combine(out_buf, gates, idx, slot, keep)
+        if self.dense_residual:
+            y = y + self._residual_ffn().apply_deploy(params["residual"], x2)
+        return y.reshape(shape).astype(self.dtype)

@@ -1,0 +1,252 @@
+"""BinaryDense: the COBRA linear layer (QAT twin + packed deploy path).
+
+Two faces of the same layer, kept numerically identical (tested invariant):
+
+QAT ("train") face — latent fp weights, BiT-style:
+    y = alpha_a * alpha_w,j * (s_a . s_w,j) + bias_j
+  with s_a = sign((x - beta_a)/alpha_a) via STE, s_w = sign(w_latent) via STE,
+  alpha_w per output channel (init mean|w|, then trained), alpha_a/beta_a
+  learnable scalars per activation tensor.  The integer dot s_a . s_w is
+  computed in f32 (exact: |acc| <= K < 2^24).
+
+Deploy face — packed uint32 weights (32x smaller HBM footprint), Eq. 7 RBMM:
+    bits_a = (x >= beta_a)                      (pack kernel / pack_threshold)
+    c      = RBMM(bits_a, w_packed)             (popcount or MXU path)
+    y      = alpha_a * alpha_w * c + bias
+  or, quantization-fused (Eq. 10), emits the next layer's bits directly:
+    bits_y = (c >= theta),  theta = ceil((next_beta - bias)/ (alpha_a alpha_w))
+
+``convert()`` maps QAT params -> deploy params (pack + fold scales).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import binarize, packing, rbmm
+from repro.models import nn
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+# Production model-axis size (16 in both dry-run meshes).  Deploy specs pick
+# a shardable dim statically; packed contraction dims only shard when
+# (in_dim/32) divides this.
+MODEL_PARTITIONS = 16
+
+
+def act_bits(x: Array, beta: Array) -> Array:
+    """Signed-scheme activation bits (unpacked {0,1}): bit = x >= beta."""
+    return (x >= beta).astype(jnp.uint32)
+
+
+def act_bits_packed(x: Array, beta: Array) -> Array:
+    return packing.pack_bits(act_bits(x, beta))
+
+
+@dataclasses.dataclass(frozen=True)
+class BinaryDense:
+    in_dim: int
+    out_dim: int
+    use_bias: bool = False
+    partition: str = "col"          # col | row | none  (sharding of (in,out))
+    # when True this layer reuses caller-provided activation bits/values and
+    # carries no act scales of its own (QKV share one binarization — M1).
+    external_act: bool = False
+    dtype: Any = jnp.float32
+
+    # -- QAT ---------------------------------------------------------------
+
+    def init(self, key) -> Params:
+        std = 1.0 / math.sqrt(self.in_dim)
+        w = nn.truncated_normal(key, (self.in_dim, self.out_dim), std,
+                                jnp.float32)
+        p: Params = {
+            "w_latent": w,
+            "alpha_w": binarize.init_weight_scale(w, axis=0)[0],  # (out,)
+        }
+        if not self.external_act:
+            p["act_alpha"] = jnp.ones((), jnp.float32)
+            p["act_beta"] = jnp.zeros((), jnp.float32)
+        if self.use_bias:
+            p["bias"] = jnp.zeros((self.out_dim,), jnp.float32)
+        return p
+
+    def specs(self) -> Params:
+        wspec = {"col": P(None, "model"), "row": P("model", None),
+                 "none": P(None, None)}[self.partition]
+        out_axis = wspec[1]
+        p: Params = {"w_latent": wspec, "alpha_w": P(out_axis)}
+        if not self.external_act:
+            p["act_alpha"] = P()
+            p["act_beta"] = P()
+        if self.use_bias:
+            p["bias"] = P(out_axis)
+        return p
+
+    def apply(self, params: Params, x: Optional[Array] = None, *,
+              act_values: Optional[Array] = None,
+              act_scale: Array | float = 1.0) -> Array:
+        """QAT forward.  Either x (..., in) fp — this layer binarizes it with
+        its own scales — or act_values (+-1 / {0,1} *unscaled* values, e.g. a
+        shared QKV binarization or attention probs) with act_scale.
+
+        Scales multiply *after* the +-1 accumulation so the integer part is
+        bit-identical to the deploy RBMM (tested invariant)."""
+        if self.external_act:
+            assert act_values is not None
+            a, a_scale = act_values, act_scale
+        else:
+            assert x is not None
+            alpha = jnp.maximum(params["act_alpha"], 1e-6)
+            a = binarize.sign_ste((x - params["act_beta"]) / alpha)
+            a_scale = params["act_alpha"]
+        wb = binarize.sign_ste(params["w_latent"])
+        y = jnp.einsum("...k,kp->...p", a.astype(self.dtype),
+                       wb.astype(self.dtype),
+                       preferred_element_type=jnp.float32)
+        y = y * (params["alpha_w"].astype(jnp.float32) *
+                 jnp.asarray(a_scale, jnp.float32))
+        if self.use_bias:
+            y = y + params["bias"]
+        return y.astype(self.dtype)
+
+    # -- deploy ------------------------------------------------------------
+
+    def convert(self, params: Params) -> Params:
+        """QAT params -> deploy params (packed weights, folded scales)."""
+        w = params["w_latent"]
+        d: Params = {
+            # (out, in/32): columns packed along the contraction dim
+            "w_packed": packing.pack_signs(w.T),
+            "alpha_w": params["alpha_w"],
+        }
+        if not self.external_act:
+            d["act_alpha"] = params["act_alpha"]
+            d["act_beta"] = params["act_beta"]
+        if self.use_bias:
+            d["bias"] = params["bias"]
+        return d
+
+    def deploy_specs(self) -> Params:
+        mp = MODEL_PARTITIONS
+        kp_ok = packing.packed_len(self.in_dim) % mp == 0
+        out_ok = self.out_dim % mp == 0
+        if self.partition == "col":
+            # prefer output sharding; fall back to packed-contraction
+            wspec = (P("model", None) if out_ok else
+                     (P(None, "model") if kp_ok else P(None, None)))
+        elif self.partition == "row":
+            # prefer packed-contraction sharding; fall back to output
+            wspec = (P(None, "model") if kp_ok else
+                     (P("model", None) if out_ok else P(None, None)))
+        else:
+            wspec = P(None, None)
+        out_axis = wspec[0] if wspec[0] == "model" else None
+        p: Params = {"w_packed": wspec, "alpha_w": P(out_axis)}
+        if not self.external_act:
+            p["act_alpha"] = P()
+            p["act_beta"] = P()
+        if self.use_bias:
+            p["bias"] = P(out_axis)
+        return p
+
+    def apply_deploy(self, params: Params, x: Optional[Array] = None, *,
+                     bits: Optional[Array] = None,
+                     act_alpha: Optional[Array] = None,
+                     scheme: str = "xnor", dc: Optional[Array] = None,
+                     impl: str = "auto") -> Array:
+        """Deploy forward -> fp output.
+
+        Either x (fp activations; this layer binarizes+packs them) or bits
+        (packed uint32 from an upstream fused layer, with act_alpha and, for
+        the unsigned scheme, dc).
+        """
+        if bits is None:
+            assert not self.external_act and x is not None
+            beta = params["act_beta"]
+            bits = act_bits_packed(x, beta)
+            act_alpha = params["act_alpha"]
+            scheme = "xnor"
+        assert act_alpha is not None
+        shape = bits.shape[:-1]
+        a2 = bits.reshape(-1, bits.shape[-1])
+        dc2 = dc.reshape(-1) if dc is not None else None
+        c = rbmm.rbmm_int(a2, params["w_packed"], self.in_dim,
+                          scheme=scheme, dc=dc2, impl=impl)
+        c = c.reshape(shape + (self.out_dim,))
+        y = (c.astype(jnp.float32) * params["alpha_w"] *
+             act_alpha.astype(jnp.float32))
+        if self.use_bias:
+            y = y + params["bias"]
+        return y.astype(self.dtype)
+
+    def apply_deploy_fused(self, params: Params, x: Array,
+                           next_beta: Array,
+                           *, impl: str = "auto",
+                           return_dc: bool = False
+                           ) -> Tuple[Array, Optional[Array]]:
+        """Deploy forward with Eq. 10 fusion: emits *packed signed bits* of
+        binarize(y, next_beta) without materializing y (the paper's M1).
+
+        theta_j = ceil((next_beta - bias_j) / (alpha_a * alpha_w_j)).
+        Only valid when the consumer is a signed binarization (no RoPE or
+        other fp op in between).
+        """
+        beta = params["act_beta"]
+        bits = act_bits_packed(x, beta)
+        scale = params["act_alpha"] * params["alpha_w"]
+        shift = params["bias"] if self.use_bias else 0.0
+        theta = jnp.ceil((next_beta - shift) / jnp.maximum(scale, 1e-12))
+        shape = bits.shape[:-1]
+        a2 = bits.reshape(-1, bits.shape[-1])
+        out_bits, dc_ret = rbmm.rbmm_binary(
+            a2, params["w_packed"], self.in_dim, theta.astype(jnp.int32),
+            scheme="xnor", impl=impl, return_dc=return_dc)
+        out_bits = out_bits.reshape(shape + (out_bits.shape[-1],))
+        if dc_ret is not None:
+            dc_ret = dc_ret.reshape(shape)
+        return out_bits, dc_ret
+
+    def apply_deploy_fused_unsigned(self, params: Params, x: Array,
+                                    h_alpha: Array, h_beta: Array, *,
+                                    relu: bool = True, impl: str = "auto",
+                                    return_dc: bool = True,
+                                    act_alpha: Optional[Array] = None,
+                                    act_beta: Optional[Array] = None
+                                    ) -> Tuple[Array, Optional[Array]]:
+        """F1: fused ReLU + *unsigned* binarization (Eq. 10, second case).
+
+        bit = (relu(y) >= h_beta + h_alpha/2).  When the fp threshold
+        t = h_beta + h_alpha/2 > 0 the ReLU is absorbed (c >= ceil((t-b)/s));
+        otherwise every post-ReLU value passes and theta drops to -(K+1)
+        (always true, since c >= -K).  This is the paper's
+        theta = max(0, r(alpha/2 + beta)) merge, done exactly.
+        """
+        if act_alpha is None:
+            act_alpha = params["act_alpha"]
+        if act_beta is None:
+            act_beta = params["act_beta"]
+        bits = act_bits_packed(x, act_beta)
+        scale = jnp.maximum(act_alpha * params["alpha_w"], 1e-12)
+        shift = params["bias"] if self.use_bias else jnp.zeros(())
+        t = h_beta + 0.5 * h_alpha
+        theta = jnp.ceil((t - shift) / scale)
+        if relu:
+            theta = jnp.where(t > 0, theta,
+                              jnp.float32(-(self.in_dim + 1)))
+        shape = bits.shape[:-1]
+        a2 = bits.reshape(-1, bits.shape[-1])
+        out_bits, dc_ret = rbmm.rbmm_binary(
+            a2, params["w_packed"], self.in_dim,
+            jnp.broadcast_to(theta, (self.out_dim,)).astype(jnp.int32),
+            scheme="xnor", impl=impl, return_dc=return_dc)
+        out_bits = out_bits.reshape(shape + (out_bits.shape[-1],))
+        if dc_ret is not None:
+            dc_ret = dc_ret.reshape(shape)
+        return out_bits, dc_ret

@@ -1,0 +1,527 @@
+"""LM wrappers: decoder-only (all LM-family archs), encoder-decoder
+(seamless), with frontend stubs for [vlm]/[audio] backbones.
+
+Execution faces:
+  train_loss / qat_logits   — QAT forward (scan-over-layers for uniform
+                              stacks, python loop for heterogeneous xLSTM),
+                              remat per block, activations sequence-sharded
+                              at block boundaries (Megatron-SP style).
+  prefill_logits            — deploy full-sequence forward (binary weights).
+  prefill_with_cache        — deploy prefill that also builds decode caches
+                              (python loop; heterogeneous ring sizes).
+  decode_step               — deploy single-token step on binary KV caches.
+
+The frontend for [vlm]/[audio] archs is a STUB per the assignment:
+``input_specs`` provides precomputed patch/frame embeddings; here a single fp
+projection maps them into the backbone width and they are prepended to the
+token embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models.blocks import Block
+from repro.models.sharding import constrain
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+FULL_WINDOW = 1 << 30  # per-layer window sentinel meaning "full attention"
+
+VOCAB_PAD = 256  # embeddings pad to a multiple of this (Megatron-style) so
+#                  the vocab dim always divides the model axis; logits are
+#                  sliced back to the true vocab before the loss.
+
+
+def padded_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD) * VOCAB_PAD
+
+
+def _layer_plan(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """[(kind, static_window)] for the decoder stack."""
+    plan: List[Tuple[str, int]] = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "hybrid":
+            kind = "hybrid"
+        elif cfg.family == "ssm":
+            every = cfg.ssm.slstm_every if cfg.ssm else 0
+            kind = "slstm" if (every and (i + 1) % every == 0) else "mlstm"
+        else:
+            kind = "attn"
+        w = cfg.window_size
+        if cfg.local_global_ratio:
+            r = cfg.local_global_ratio
+            w = 0 if (i % (r + 1)) == r else cfg.window_size
+        plan.append((kind, w))
+    return plan
+
+
+@dataclasses.dataclass(frozen=True)
+class LMModel:
+    cfg: ModelConfig
+
+    # -- structure ------------------------------------------------------------
+
+    @property
+    def plan(self) -> List[Tuple[str, int]]:
+        return _layer_plan(self.cfg)
+
+    @property
+    def uniform(self) -> bool:
+        return len({k for k, _ in self.plan}) == 1
+
+    def _block(self, kind: str, window: int) -> Block:
+        return Block(self.cfg, kind=kind, window=window)
+
+    def _embed(self) -> nn.Embedding:
+        return nn.Embedding(padded_vocab(self.cfg.vocab_size),
+                            self.cfg.d_model)
+
+    def _head(self) -> Optional[nn.Dense]:
+        if self.cfg.tie_embeddings:
+            return None
+        return nn.Dense(self.cfg.d_model, padded_vocab(self.cfg.vocab_size),
+                        use_bias=False, partition="col")
+
+    def _frontend(self) -> Optional[nn.Dense]:
+        if not self.cfg.frontend_tokens:
+            return None
+        return nn.Dense(self.frontend_dim, self.cfg.d_model, use_bias=False,
+                        partition="none")
+
+    @property
+    def frontend_dim(self) -> int:
+        return min(self.cfg.d_model, 1024)
+
+    def _norm(self):
+        return nn.make_norm(self.cfg.norm, self.cfg.d_model)
+
+    # -- params ----------------------------------------------------------------
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p: Params = {"embed": self._embed().init(ks[0]),
+                     "final_norm": self._norm().init(None)}
+        head = self._head()
+        if head is not None:
+            p["head"] = head.init(ks[1])
+        fr = self._frontend()
+        if fr is not None:
+            p["frontend"] = fr.init(ks[2])
+        plan = self.plan
+        if self.uniform:
+            kind = plan[0][0]
+            blk = self._block(kind, 0)
+            p["blocks"] = nn.stack_init(blk.init, ks[3], cfg.num_layers)
+        else:
+            bks = jax.random.split(ks[3], cfg.num_layers)
+            p["blocks"] = [self._block(k, w).init(bk)
+                           for (k, w), bk in zip(plan, bks)]
+        return p
+
+    def _spec_tree(self, deploy: bool) -> Params:
+        cfg = self.cfg
+        p: Params = {"embed": self._embed().specs(),
+                     "final_norm": self._norm().specs()}
+        head = self._head()
+        if head is not None:
+            p["head"] = head.specs()
+        fr = self._frontend()
+        if fr is not None:
+            p["frontend"] = fr.specs()
+        plan = self.plan
+        if self.uniform:
+            blk = self._block(plan[0][0], 0)
+            p["blocks"] = nn.stack_spec(blk.specs(deploy))
+        else:
+            p["blocks"] = [self._block(k, w).specs(deploy)
+                           for (k, w) in plan]
+        return p
+
+    def specs(self) -> Params:
+        return self._spec_tree(False)
+
+    def deploy_specs(self) -> Params:
+        return self._spec_tree(True)
+
+    def convert(self, params: Params) -> Params:
+        plan = self.plan
+        out = {k: v for k, v in params.items() if k != "blocks"}
+        if self.uniform:
+            blk = self._block(plan[0][0], 0)
+            out["blocks"] = jax.vmap(blk.convert)(params["blocks"])
+        else:
+            out["blocks"] = [self._block(k, w).convert(bp) for (k, w), bp
+                             in zip(plan, params["blocks"])]
+        return out
+
+    # -- embedding / head -------------------------------------------------------
+
+    def _embed_tokens(self, params: Params, tokens: Array,
+                      frontend_embeds: Optional[Array]) -> Array:
+        x = self._embed().apply(params["embed"], tokens)
+        x = x.astype(jnp.dtype(self.cfg.compute_dtype))
+        x = x * jnp.sqrt(jnp.float32(self.cfg.d_model)).astype(x.dtype)
+        if self.cfg.frontend_tokens:
+            assert frontend_embeds is not None, \
+                f"{self.cfg.name} needs frontend_embeds in the batch"
+            fe = self._frontend().apply(params["frontend"],
+                                        frontend_embeds.astype(x.dtype))
+            x = jnp.concatenate([fe, x], axis=1)
+        return constrain(x, "batch", None, None)
+
+    def _logits(self, params: Params, x: Array) -> Array:
+        x = self._norm().apply(params["final_norm"], x)
+        if self.cfg.tie_embeddings:
+            lg = self._embed().attend(params["embed"], x)
+        else:
+            lg = self._head().apply(params["head"], x)
+        return lg[..., :self.cfg.vocab_size]
+
+    # -- QAT face ---------------------------------------------------------------
+
+    def _windows_array(self) -> Array:
+        return jnp.asarray([w or FULL_WINDOW for _, w in self.plan],
+                           jnp.int32)
+
+    def qat_hidden(self, params: Params, tokens: Array, *,
+                   frontend_embeds: Optional[Array] = None) -> Tuple[
+                       Array, Dict[str, Array]]:
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens, frontend_embeds)
+        aux_total = jnp.zeros((), jnp.float32)
+        if self.uniform:
+            blk = self._block(self.plan[0][0], 0)
+            # uniform window -> static python int (enables the O(S*W)
+            # sliced-window attention path); mixed (gemma) -> per-layer
+            # traced scan data on the dense path
+            wset = {w for _, w in self.plan}
+            static_w = wset.pop() or None if len(wset) == 1 else None
+
+            def body(carry, layer):
+                xx, acc = carry
+                if static_w is None and len({w for _, w in self.plan}) > 1:
+                    lp, w = layer
+                else:
+                    lp, w = layer, static_w
+
+                def run(xx):
+                    y, aux = blk.qat(lp, xx, window=w)
+                    return y, aux.get("moe_aux_loss", jnp.zeros((),
+                                                                jnp.float32))
+
+                if cfg.remat != "none":
+                    run = jax.checkpoint(run)
+                y, a = run(xx)
+                if cfg.act_shard == "seq":
+                    y = constrain(y, "batch", "model", None)
+                return (y, acc + a), ()
+
+            xs = (params["blocks"], self._windows_array()) \
+                if (static_w is None and len({w for _, w in self.plan}) > 1) \
+                else params["blocks"]
+            (x, aux_total), _ = lax.scan(body, (x, aux_total), xs)
+        else:
+            for (kind, w), bp in zip(self.plan, params["blocks"]):
+                blk = self._block(kind, w)
+
+                def run(xx, blk=blk, bp=bp):
+                    y, aux = blk.qat(bp, xx)
+                    return y, aux.get("moe_aux_loss",
+                                      jnp.zeros((), jnp.float32))
+
+                if cfg.remat != "none":
+                    run = jax.checkpoint(run)
+                x, a = run(x)
+                aux_total = aux_total + a
+        return x, {"moe_aux_loss": aux_total}
+
+    def qat_logits(self, params: Params, tokens: Array, *,
+                   frontend_embeds: Optional[Array] = None) -> Array:
+        x, _ = self.qat_hidden(params, tokens,
+                               frontend_embeds=frontend_embeds)
+        return self._logits(params, x)
+
+    def train_loss(self, params: Params, batch: Dict[str, Array]
+                   ) -> Tuple[Array, Dict[str, Array]]:
+        """batch: tokens (B,S), labels (B,S) with -1 = ignore, optional
+        frontend_embeds."""
+        x, aux = self.qat_hidden(params, batch["tokens"],
+                                 frontend_embeds=batch.get("frontend_embeds"))
+        if self.cfg.frontend_tokens:
+            x = x[:, self.cfg.frontend_tokens:]
+        logits = self._logits(params, x).astype(jnp.float32)
+        labels = batch["labels"]
+        valid = labels >= 0
+        lab = jnp.where(valid, labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(valid.sum(), 1)
+        loss = jnp.where(valid, nll, 0.0).sum() / denom
+        # z-loss stabilizer + MoE load balance
+        zl = 1e-4 * (jax.nn.logsumexp(logits, axis=-1) ** 2)
+        loss_total = (loss + jnp.where(valid, zl, 0.0).sum() / denom +
+                      0.01 * aux["moe_aux_loss"])
+        metrics = {"loss": loss, "moe_aux": aux["moe_aux_loss"],
+                   "tokens": valid.sum()}
+        return loss_total, metrics
+
+    # -- deploy faces -------------------------------------------------------------
+
+    def prefill_logits(self, dparams: Params, tokens: Array, *,
+                       frontend_embeds: Optional[Array] = None) -> Array:
+        """Deploy full-sequence forward (no cache) — the prefill dry-run cell."""
+        x = self._embed_tokens(dparams, tokens, frontend_embeds)
+        if self.uniform:
+            blk = self._block(self.plan[0][0], 0)
+            wset = {w for _, w in self.plan}
+            static_w = wset.pop() or None if len(wset) == 1 else None
+            mixed = static_w is None and len({w for _, w in self.plan}) > 1
+
+            def body(xx, layer):
+                if mixed:
+                    lp, w = layer
+                else:
+                    lp, w = layer, static_w
+                y, _ = blk.deploy_prefill(lp, xx, window=w)
+                if self.cfg.act_shard == "seq":
+                    y = constrain(y, "batch", "model", None)
+                return y, ()
+
+            xs = (dparams["blocks"], self._windows_array()) if mixed \
+                else dparams["blocks"]
+            x, _ = lax.scan(body, x, xs)
+        else:
+            for (kind, w), bp in zip(self.plan, dparams["blocks"]):
+                x, _ = self._block(kind, w).deploy_prefill(bp, x)
+        return self._logits(dparams, x)
+
+    def prefill_with_cache(self, dparams: Params, tokens: Array, *,
+                           max_len: int,
+                           frontend_embeds: Optional[Array] = None
+                           ) -> Tuple[Array, List[Dict[str, Any]]]:
+        """Python-loop prefill that returns per-layer decode caches."""
+        x = self._embed_tokens(dparams, tokens, frontend_embeds)
+        caches: List[Dict[str, Any]] = []
+        for i, (kind, w) in enumerate(self.plan):
+            bp = (jax.tree.map(lambda t: t[i], dparams["blocks"])
+                  if self.uniform else dparams["blocks"][i])
+            blk = self._block(kind, w)
+            cache_size = min(w or max_len, max_len)
+            x, cache = blk.deploy_prefill(bp, x, cache_size=cache_size)
+            caches.append(cache)
+        return self._logits(dparams, x[:, -1:]), caches
+
+    def init_caches(self, batch: int, max_len: int) -> List[Dict[str, Any]]:
+        return [self._block(kind, w).init_cache(batch, max_len)
+                for kind, w in self.plan]
+
+    def decode_step(self, dparams: Params, token: Array,
+                    caches: List[Dict[str, Any]]
+                    ) -> Tuple[Array, List[Dict[str, Any]]]:
+        """token: (B, 1) int32.  Returns (logits (B,1,V), new caches)."""
+        x = self._embed().apply(dparams["embed"], token)
+        x = x * jnp.sqrt(jnp.float32(self.cfg.d_model)).astype(x.dtype)
+        new_caches = []
+        for i, (kind, w) in enumerate(self.plan):
+            bp = (jax.tree.map(lambda t: t[i], dparams["blocks"])
+                  if self.uniform else dparams["blocks"][i])
+            blk = self._block(kind, w)
+            x, c = blk.deploy_decode(bp, x, caches[i])
+            new_caches.append(c)
+        return self._logits(dparams, x), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (seamless-m4t backbone)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecModel:
+    cfg: ModelConfig
+
+    @property
+    def enc_layers(self) -> int:
+        return self.cfg.num_encoder_layers
+
+    def _enc_block(self) -> Block:
+        return Block(self.cfg, kind="attn", causal=False)
+
+    def _dec_block(self) -> Block:
+        return Block(self.cfg, kind="dec")
+
+    def _embed(self) -> nn.Embedding:
+        return nn.Embedding(padded_vocab(self.cfg.vocab_size),
+                            self.cfg.d_model)
+
+    def _head(self) -> nn.Dense:
+        return nn.Dense(self.cfg.d_model, padded_vocab(self.cfg.vocab_size),
+                        use_bias=False, partition="col")
+
+    def _frontend(self) -> nn.Dense:
+        return nn.Dense(self.frontend_dim, self.cfg.d_model, use_bias=False,
+                        partition="none")
+
+    @property
+    def frontend_dim(self) -> int:
+        return min(self.cfg.d_model, 1024)
+
+    def _norm(self):
+        return nn.make_norm(self.cfg.norm, self.cfg.d_model)
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": self._embed().init(ks[0]),
+            "frontend": self._frontend().init(ks[1]),
+            "head": self._head().init(ks[2]),
+            "enc_norm": self._norm().init(None),
+            "final_norm": self._norm().init(None),
+            "encoder": nn.stack_init(self._enc_block().init, ks[3],
+                                     self.enc_layers),
+            "decoder": nn.stack_init(self._dec_block().init, ks[4],
+                                     self.cfg.num_layers),
+        }
+
+    def _spec_tree(self, deploy: bool) -> Params:
+        return {
+            "embed": self._embed().specs(),
+            "frontend": self._frontend().specs(),
+            "head": self._head().specs(),
+            "enc_norm": self._norm().specs(),
+            "final_norm": self._norm().specs(),
+            "encoder": nn.stack_spec(self._enc_block().specs(deploy)),
+            "decoder": nn.stack_spec(self._dec_block().specs(deploy)),
+        }
+
+    def specs(self) -> Params:
+        return self._spec_tree(False)
+
+    def deploy_specs(self) -> Params:
+        return self._spec_tree(True)
+
+    def convert(self, params: Params) -> Params:
+        out = {k: v for k, v in params.items()
+               if k not in ("encoder", "decoder")}
+        out["encoder"] = jax.vmap(self._enc_block().convert)(
+            params["encoder"])
+        out["decoder"] = jax.vmap(self._dec_block().convert)(
+            params["decoder"])
+        return out
+
+    def encode(self, params: Params, frontend_embeds: Array, *,
+               deploy: bool = False) -> Array:
+        fr = self._frontend().apply(params["frontend"], frontend_embeds)
+        x = constrain(fr, "batch", None, None)
+        blk = self._enc_block()
+
+        def body(xx, lp):
+            if deploy:
+                y, _ = blk.deploy_prefill(lp, xx)
+            else:
+                y, _ = blk.qat(lp, xx)
+            return constrain(y, "batch", "model", None), ()
+
+        x, _ = lax.scan(body, x, params["encoder"])
+        return self._norm().apply(params["enc_norm"], x)
+
+    def _decode_stack(self, params: Params, x: Array, memory: Array, *,
+                      deploy: bool) -> Array:
+        blk = self._dec_block()
+
+        def body(xx, lp):
+            if deploy:
+                y, _ = blk.deploy_prefill(lp, xx, memory=memory)
+            else:
+                y, _ = blk.qat(lp, xx, memory=memory)
+            return constrain(y, "batch", "model", None), ()
+
+        x, _ = lax.scan(body, x, params["decoder"])
+        return x
+
+    def _embed_tokens(self, params: Params, tokens: Array) -> Array:
+        x = self._embed().apply(params["embed"], tokens)
+        x = x.astype(jnp.dtype(self.cfg.compute_dtype))
+        return x * jnp.sqrt(jnp.float32(self.cfg.d_model)).astype(x.dtype)
+
+    def train_loss(self, params: Params, batch: Dict[str, Array]
+                   ) -> Tuple[Array, Dict[str, Array]]:
+        """batch: frontend_embeds (B,Senc,Df), tokens (B,Sdec), labels."""
+        memory = self.encode(params, batch["frontend_embeds"])
+        x = self._embed_tokens(params, batch["tokens"])
+        x = self._decode_stack(params, x, memory, deploy=False)
+        logits = self._head().apply(
+            params["head"],
+            self._norm().apply(params["final_norm"], x)).astype(jnp.float32)
+        logits = logits[..., :self.cfg.vocab_size]
+        labels = batch["labels"]
+        valid = labels >= 0
+        lab = jnp.where(valid, labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(valid.sum(), 1)
+        loss = jnp.where(valid, nll, 0.0).sum() / denom
+        return loss, {"loss": loss, "tokens": valid.sum(),
+                      "moe_aux": jnp.zeros((), jnp.float32)}
+
+    def prefill_logits(self, dparams: Params, tokens: Array, *,
+                       frontend_embeds: Array) -> Array:
+        memory = self.encode(dparams, frontend_embeds, deploy=True)
+        x = self._embed_tokens(dparams, tokens)
+        x = self._decode_stack(dparams, x, memory, deploy=True)
+        lg = self._head().apply(
+            dparams["head"], self._norm().apply(dparams["final_norm"], x))
+        return lg[..., :self.cfg.vocab_size]
+
+    def prefill_with_cache(self, dparams: Params, tokens: Array, *,
+                           max_len: int, frontend_embeds: Array
+                           ) -> Tuple[Array, List[Dict[str, Any]]]:
+        memory = self.encode(dparams, frontend_embeds, deploy=True)
+        x = self._embed_tokens(dparams, tokens)
+        caches = []
+        blk = self._dec_block()
+        for i in range(self.cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[i], dparams["decoder"])
+            x, cache = blk.deploy_prefill(lp, x, memory=memory,
+                                          cache_size=max_len)
+            caches.append(cache)
+        logits = self._head().apply(
+            dparams["head"],
+            self._norm().apply(dparams["final_norm"], x[:, -1:]))
+        return logits[..., :self.cfg.vocab_size], caches
+
+    def init_caches(self, batch: int, max_len: int,
+                    memory_len: int) -> List[Dict[str, Any]]:
+        return [self._dec_block().init_cache(batch, max_len,
+                                             memory_len=memory_len)
+                for _ in range(self.cfg.num_layers)]
+
+    def decode_step(self, dparams: Params, token: Array,
+                    caches: List[Dict[str, Any]]
+                    ) -> Tuple[Array, List[Dict[str, Any]]]:
+        x = self._embed_tokens(dparams, token)
+        new_caches = []
+        blk = self._dec_block()
+        for i in range(self.cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[i], dparams["decoder"])
+            x, c = blk.deploy_decode(lp, x, caches[i])
+            new_caches.append(c)
+        logits = self._head().apply(
+            dparams["head"], self._norm().apply(dparams["final_norm"], x))
+        return logits[..., :self.cfg.vocab_size], new_caches
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "audio" or cfg.num_encoder_layers:
+        return EncDecModel(cfg)
+    return LMModel(cfg)

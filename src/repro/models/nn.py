@@ -1,0 +1,166 @@
+"""Minimal functional NN layer system with first-class sharding specs.
+
+No flax/haiku dependency (not installed, not needed): layers are frozen
+dataclasses with ``init(key) -> params`` (a nested dict of arrays),
+``apply(params, ...)``, and ``specs() -> matching nested dict of
+jax.sharding.PartitionSpec``.  The spec tree is what ``launch/dryrun.py``
+and the trainer feed to jit's in_shardings — sharding is declared where the
+parameter is declared, MaxText-style logical axes collapsed to the physical
+("pod", "data", "model") mesh directly.
+
+Conventions:
+  * "model" shards: vocab dim of embeddings, head/ff output dim of
+    col-parallel weights, contraction dim of row-parallel weights, expert
+    dim of MoE stacks.
+  * batch shards over ("pod", "data") — see repro.launch.mesh.data_axes.
+  * stacked-layer parameters (scan-over-layers) get a leading None axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+DATA_AXES = ("pod", "data")  # logical batch axes; mesh may lack "pod"
+
+
+def truncated_normal(key, shape, std, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def stack_init(layer_init: Callable[[jax.Array], Params], key: jax.Array,
+               n: int) -> Params:
+    """Initialize n identical layers as stacked params (leading axis n)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(layer_init)(keys)
+
+
+def stack_spec(spec: Params) -> Params:
+    """Prepend a None (layer) axis to every PartitionSpec in a tree."""
+    return jax.tree.map(lambda s: P(None, *s), spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def zeros_init(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms (fp — the paper keeps LayerNorm in 16-bit fixed point; on TPU the
+# VPU has no fixed-point advantage so we use fp32 math in bf16 containers)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm:
+    dim: int
+    eps: float = 1e-6
+
+    def init(self, key) -> Params:
+        del key
+        return {"scale": jnp.ones((self.dim,), jnp.float32)}
+
+    def specs(self) -> Params:
+        return {"scale": P(None)}
+
+    def apply(self, params: Params, x: Array) -> Array:
+        dt = x.dtype
+        x = x.astype(jnp.float32)
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + self.eps) * params["scale"]
+        return y.astype(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm:
+    dim: int
+    eps: float = 1e-6
+
+    def init(self, key) -> Params:
+        del key
+        return {"scale": jnp.ones((self.dim,), jnp.float32),
+                "bias": jnp.zeros((self.dim,), jnp.float32)}
+
+    def specs(self) -> Params:
+        return {"scale": P(None), "bias": P(None)}
+
+    def apply(self, params: Params, x: Array) -> Array:
+        dt = x.dtype
+        x = x.astype(jnp.float32)
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + self.eps)
+        return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+def make_norm(kind: str, dim: int):
+    return RMSNorm(dim) if kind == "rmsnorm" else LayerNorm(dim)
+
+
+# ---------------------------------------------------------------------------
+# Embedding (vocab-sharded) + fp Dense (router / frontends / heads)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding:
+    vocab: int
+    dim: int
+    dtype: Any = jnp.float32
+
+    def init(self, key) -> Params:
+        # d^-0.5: unit-scale activations after the sqrt(d) input multiplier,
+        # and O(1) logits when used as the tied LM head.
+        emb = truncated_normal(key, (self.vocab, self.dim),
+                               self.dim ** -0.5, self.dtype)
+        return {"embedding": emb}
+
+    def specs(self) -> Params:
+        return {"embedding": P("model", None)}
+
+    def apply(self, params: Params, ids: Array) -> Array:
+        return jnp.take(params["embedding"], ids, axis=0)
+
+    def attend(self, params: Params, x: Array) -> Array:
+        """Tied-embedding logits."""
+        return jnp.einsum("...d,vd->...v", x, params["embedding"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    in_dim: int
+    out_dim: int
+    use_bias: bool = True
+    dtype: Any = jnp.float32
+    # sharding of (in, out): "col" -> P(None, "model"); "row" -> P("model",
+    # None); "none" -> replicated
+    partition: str = "col"
+
+    def init(self, key) -> Params:
+        std = 1.0 / math.sqrt(self.in_dim)
+        p = {"kernel": truncated_normal(key, (self.in_dim, self.out_dim),
+                                        std, self.dtype)}
+        if self.use_bias:
+            p["bias"] = jnp.zeros((self.out_dim,), self.dtype)
+        return p
+
+    def specs(self) -> Params:
+        ps = {"col": P(None, "model"), "row": P("model", None),
+              "none": P(None, None)}[self.partition]
+        out = {"kernel": ps}
+        if self.use_bias:
+            out["bias"] = P(ps[1]) if self.partition == "col" else P(None)
+        return out
+
+    def apply(self, params: Params, x: Array) -> Array:
+        y = jnp.einsum("...k,kp->...p", x, params["kernel"])
+        if self.use_bias:
+            y = y + params["bias"]
+        return y

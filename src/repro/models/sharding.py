@@ -1,0 +1,54 @@
+"""Activation-sharding context: models stay mesh-agnostic, launchers opt in.
+
+``with activation_sharding(mesh, data_axes):`` makes ``constrain(x, ...)``
+inside model code emit ``lax.with_sharding_constraint`` against that mesh;
+outside any context (unit tests, single-device smoke) constrain() is a no-op.
+The "batch" placeholder resolves to the mesh's data axes (("data",) single
+pod, ("pod", "data") multi-pod) so model code never hard-codes axis names.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, data_axes: Sequence[str]):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, tuple(data_axes))
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current() -> Optional[Tuple[Mesh, Tuple[str, ...]]]:
+    return getattr(_STATE, "ctx", None)
+
+
+def constrain(x, *axes):
+    """axes: one entry per dim; "batch" -> data axes tuple, "model"/"data" ->
+    that mesh axis, None -> unsharded.  No-op outside a sharding context."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, data_axes = ctx
+    resolved = []
+    for a in axes:
+        if a == "batch":
+            resolved.append(data_axes)
+        else:
+            resolved.append(a)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def batch_axes() -> Tuple[str, ...]:
+    ctx = current()
+    return ctx[1] if ctx else ("data",)

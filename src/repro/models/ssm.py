@@ -1,0 +1,399 @@
+"""SSM / recurrent blocks: Mamba (hymba's parallel branch) and xLSTM cells.
+
+COBRA applicability (DESIGN.md §Arch-applicability): SPS targets softmax
+attention, which these blocks do not have; RBMM targets binary matmuls, which
+they do have — every in/out/QKV-like *projection* here is a BinaryDense
+(binary weights + activations, deployable as packed RBMM).  The elementwise
+recurrences (selective scan, exponential gating) stay fp — they are O(L*d)
+vs the projections' O(L*d^2), the same cost class as the paper's fp
+LayerNorm.
+
+Both cells support the three faces: QAT (deploy=False), deploy full-sequence
+(deploy=True), and deploy single-step decode via an explicit recurrent state
+(these archs are the reason ``long_500k`` runs: state is O(1) in L).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import nn
+from repro.models.linear import BinaryDense
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+class MambaCache(NamedTuple):
+    conv: Array    # (B, d_inner, conv_width-1) rolling conv inputs
+    h: Array       # (B, d_inner, state) SSM state
+
+
+class XLSTMCache(NamedTuple):
+    c: Array       # mLSTM: (B, H, dv, dk) matrix cell | sLSTM: (B, d_inner)
+    n: Array       # normalizer: (B, H, dk) | (B, d_inner)
+    m: Array       # max-gate stabilizer: (B, H) | (B, d_inner)
+
+
+def _proj(dense: BinaryDense, p: Params, x: Array, deploy: bool) -> Array:
+    return dense.apply_deploy(p, x) if deploy else dense.apply(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaBlock:
+    d_model: int
+    state_size: int = 16
+    conv_width: int = 4
+    expand: int = 2
+    dt_rank: int = 0                # 0 => ceil(d_model/16)
+    dtype: Any = jnp.float32
+    impl: str = "auto"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+    def _in_proj(self):
+        return BinaryDense(self.d_model, 2 * self.d_inner, partition="col",
+                           dtype=self.dtype)
+
+    def _out_proj(self):
+        return BinaryDense(self.d_inner, self.d_model, partition="row",
+                           dtype=self.dtype)
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 5)
+        di, st = self.d_inner, self.state_size
+        a_init = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None],
+                          (di, 1))
+        return {
+            "in_proj": self._in_proj().init(ks[0]),
+            "out_proj": self._out_proj().init(ks[1]),
+            "conv_w": nn.truncated_normal(ks[2], (self.conv_width, di),
+                                          0.5 / self.conv_width),
+            "conv_b": jnp.zeros((di,), jnp.float32),
+            # fp selective-parameter projection (tiny): d_inner -> r + 2*state
+            "x_proj": nn.truncated_normal(ks[3],
+                                          (di, self.rank + 2 * st),
+                                          di ** -0.5),
+            "dt_proj": nn.truncated_normal(ks[4], (self.rank, di),
+                                           self.rank ** -0.5),
+            "dt_bias": jnp.full((di,), -4.0, jnp.float32),  # softplus ~ small
+            "a_log": jnp.log(a_init),
+            "d_skip": jnp.ones((di,), jnp.float32),
+        }
+
+    def specs(self, deploy: bool = False) -> Params:
+        ip = (self._in_proj().deploy_specs() if deploy
+              else self._in_proj().specs())
+        op = (self._out_proj().deploy_specs() if deploy
+              else self._out_proj().specs())
+        return {
+            "in_proj": ip, "out_proj": op,
+            "conv_w": P(None, "model"), "conv_b": P("model"),
+            "x_proj": P("model", None), "dt_proj": P(None, "model"),
+            "dt_bias": P("model"), "a_log": P("model", None),
+            "d_skip": P("model"),
+        }
+
+    def convert(self, params: Params) -> Params:
+        d = dict(params)
+        d["in_proj"] = self._in_proj().convert(params["in_proj"])
+        d["out_proj"] = self._out_proj().convert(params["out_proj"])
+        return d
+
+    # -- selective scan ------------------------------------------------------
+
+    def _ssm_params(self, params: Params, u: Array):
+        """u: (..., di) conv output -> (dt, b, c) selective params."""
+        xp = u.astype(jnp.float32) @ params["x_proj"]
+        dt, b, c = jnp.split(xp, [self.rank, self.rank + self.state_size],
+                             axis=-1)
+        dt = jax.nn.softplus(dt @ params["dt_proj"] + params["dt_bias"])
+        return dt, b, c                       # (...,di), (...,st), (...,st)
+
+    def _scan(self, params: Params, u: Array, h0: Array
+              ) -> Tuple[Array, Array]:
+        """u: (B, L, di).  Sequential selective scan.
+        Returns (y (B, L, di), h_last (B, di, st))."""
+        a = -jnp.exp(params["a_log"])                      # (di, st)
+        dt, b, c = self._ssm_params(params, u)             # (B,L,di/st)
+
+        def step(h, ins):
+            u_t, dt_t, b_t, c_t = ins                      # (B,di),(B,di),(B,st)
+            da = jnp.exp(dt_t[..., None] * a[None])        # (B,di,st)
+            dbu = dt_t[..., None] * b_t[:, None, :] * u_t[..., None]
+            h = da * h + dbu
+            y = jnp.einsum("bds,bs->bd", h, c_t)
+            return h, y
+
+        xs = (jnp.moveaxis(u.astype(jnp.float32), 1, 0),
+              jnp.moveaxis(dt, 1, 0), jnp.moveaxis(b, 1, 0),
+              jnp.moveaxis(c, 1, 0))
+        h_last, ys = lax.scan(step, h0, xs)
+        y = jnp.moveaxis(ys, 0, 1) + u * params["d_skip"]
+        return y, h_last
+
+    # -- faces -----------------------------------------------------------------
+
+    def apply(self, params: Params, x: Array, *, deploy: bool = False,
+              return_state: bool = False):
+        """x: (B, L, d) -> (B, L, d) [, MambaCache for decode continuation]."""
+        b, l, _ = x.shape
+        di = self.d_inner
+        xz = _proj(self._in_proj(), params["in_proj"], x, deploy)
+        u, z = jnp.split(xz, 2, axis=-1)
+        # depthwise causal conv over time (fp)
+        pad = self.conv_width - 1
+        u_p = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+        u_c = sum(u_p[:, i:i + l] * params["conv_w"][i]
+                  for i in range(self.conv_width)) + params["conv_b"]
+        u_c = jax.nn.silu(u_c)
+        h0 = jnp.zeros((b, di, self.state_size), jnp.float32)
+        y, h_last = self._scan(params, u_c, h0)
+        y = y * jax.nn.silu(z)
+        out = _proj(self._out_proj(), params["out_proj"],
+                    y.astype(self.dtype), deploy)
+        if return_state:
+            # conv cache = last (conv_width-1) raw u inputs; u_p is
+            # [zeros(pad), u] so its tail is exactly the causal history even
+            # when l < pad.
+            tail = jnp.swapaxes(u_p[:, u_p.shape[1] - pad:], 1, 2)
+            return out, MambaCache(tail.astype(jnp.float32), h_last)
+        return out
+
+    def init_cache(self, batch: int) -> MambaCache:
+        return MambaCache(
+            jnp.zeros((batch, self.d_inner, self.conv_width - 1),
+                      jnp.float32),
+            jnp.zeros((batch, self.d_inner, self.state_size), jnp.float32))
+
+    def decode_step(self, params: Params, x: Array, cache: MambaCache, *,
+                    deploy: bool = True) -> Tuple[Array, MambaCache]:
+        """x: (B, 1, d) -> (B, 1, d); O(1) state update."""
+        xz = _proj(self._in_proj(), params["in_proj"], x, deploy)
+        u, z = jnp.split(xz[:, 0], 2, axis=-1)             # (B, di)
+        hist = jnp.concatenate([cache.conv, u[..., None]], axis=-1)
+        u_c = jnp.einsum("bdw,wd->bd", hist,
+                         params["conv_w"]) + params["conv_b"]
+        u_c = jax.nn.silu(u_c)
+        a = -jnp.exp(params["a_log"])
+        dt, bb, cc = self._ssm_params(params, u_c)
+        da = jnp.exp(dt[..., None] * a[None])
+        h = da * cache.h + dt[..., None] * bb[:, None, :] * u_c[..., None]
+        y = jnp.einsum("bds,bs->bd", h, cc) + u_c * params["d_skip"]
+        y = y * jax.nn.silu(z)
+        out = _proj(self._out_proj(), params["out_proj"],
+                    y[:, None].astype(self.dtype), deploy)
+        return out, MambaCache(hist[..., 1:], h)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM (mLSTM + sLSTM)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMBlock:
+    """Matrix-memory LSTM (xLSTM's mLSTM) with binary q/k/v projections."""
+    d_model: int
+    num_heads: int
+    expand: int = 2
+    dtype: Any = jnp.float32
+    impl: str = "auto"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dh(self) -> int:
+        return self.d_inner // self.num_heads
+
+    def _qkv(self):
+        return BinaryDense(self.d_model, 3 * self.d_inner, partition="col",
+                           dtype=self.dtype)
+
+    def _out(self):
+        return BinaryDense(self.d_inner, self.d_model, partition="row",
+                           dtype=self.dtype)
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 3)
+        return {
+            "qkv": self._qkv().init(ks[0]),
+            "out": self._out().init(ks[1]),
+            # fp gate projections (i, f per head) — tiny
+            "w_gates": nn.truncated_normal(ks[2],
+                                           (self.d_model,
+                                            2 * self.num_heads),
+                                           self.d_model ** -0.5),
+            "b_gates": jnp.concatenate([
+                jnp.zeros((self.num_heads,)),           # input gate bias
+                3.0 * jnp.ones((self.num_heads,))]),    # forget ~ 1
+        }
+
+    def specs(self, deploy: bool = False) -> Params:
+        q = self._qkv().deploy_specs() if deploy else self._qkv().specs()
+        o = self._out().deploy_specs() if deploy else self._out().specs()
+        # gate projections are (d, 2H) with small H — replicated
+        return {"qkv": q, "out": o, "w_gates": P(None, None),
+                "b_gates": P(None)}
+
+    def convert(self, params: Params) -> Params:
+        return {"qkv": self._qkv().convert(params["qkv"]),
+                "out": self._out().convert(params["out"]),
+                "w_gates": params["w_gates"], "b_gates": params["b_gates"]}
+
+    def init_cache(self, batch: int) -> XLSTMCache:
+        h, dh = self.num_heads, self.dh
+        return XLSTMCache(jnp.zeros((batch, h, dh, dh), jnp.float32),
+                          jnp.zeros((batch, h, dh), jnp.float32),
+                          jnp.full((batch, h), -1e9, jnp.float32))
+
+    def _cell(self, carry: XLSTMCache, qkvg):
+        q, k, v, ig, fg = qkvg     # (B,H,dh) x3, (B,H), (B,H)
+        c, n, m = carry
+        log_f = -jax.nn.softplus(-fg)                   # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, ig)
+        i_ = jnp.exp(ig - m_new)
+        f_ = jnp.exp(log_f + m - m_new)
+        c = f_[..., None, None] * c + \
+            i_[..., None, None] * v[..., :, None] * k[..., None, :]
+        n = f_[..., None] * n + i_[..., None] * k
+        qn = jnp.einsum("bhk,bhk->bh", n, q)
+        denom = jnp.maximum(jnp.abs(qn), 1.0)
+        h_out = jnp.einsum("bhvk,bhk->bhv", c, q) / denom[..., None]
+        return XLSTMCache(c, n, m_new), h_out
+
+    def _qkv_gates(self, params: Params, x: Array, deploy: bool):
+        b, l, _ = x.shape
+        h, dh = self.num_heads, self.dh
+        qkv = _proj(self._qkv(), params["qkv"], x, deploy)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        shape = (b, l, h, dh)
+        q = q.reshape(shape).astype(jnp.float32)
+        k = k.reshape(shape).astype(jnp.float32) / (dh ** 0.5)
+        v = v.reshape(shape).astype(jnp.float32)
+        gates = x.astype(jnp.float32) @ params["w_gates"] + params["b_gates"]
+        ig, fg = jnp.split(gates, 2, axis=-1)           # (B, L, H)
+        return q, k, v, ig, fg
+
+    def apply(self, params: Params, x: Array, *, deploy: bool = False,
+              return_state: bool = False):
+        b, l, _ = x.shape
+        q, k, v, ig, fg = self._qkv_gates(params, x, deploy)
+        cache0 = self.init_cache(b)
+
+        def step(carry, ins):
+            return self._cell(carry, ins)
+
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, ig, fg))
+        last, hs = lax.scan(step, cache0, xs)
+        hs = jnp.moveaxis(hs, 0, 1).reshape(b, l, self.d_inner)
+        out = _proj(self._out(), params["out"], hs.astype(self.dtype),
+                    deploy)
+        return (out, last) if return_state else out
+
+    def decode_step(self, params: Params, x: Array, cache: XLSTMCache, *,
+                    deploy: bool = True) -> Tuple[Array, XLSTMCache]:
+        b = x.shape[0]
+        q, k, v, ig, fg = self._qkv_gates(params, x, deploy)
+        cache, h_out = self._cell(cache, (q[:, 0], k[:, 0], v[:, 0],
+                                          ig[:, 0], fg[:, 0]))
+        out = _proj(self._out(), params["out"],
+                    h_out.reshape(b, 1, self.d_inner).astype(self.dtype),
+                    deploy)
+        return out, cache
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMBlock:
+    """Scalar-memory LSTM (xLSTM's sLSTM) with binary in/out projections."""
+    d_model: int
+    expand: int = 2
+    dtype: Any = jnp.float32
+    impl: str = "auto"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    def _in(self):
+        return BinaryDense(self.d_model, 4 * self.d_inner, partition="col",
+                           dtype=self.dtype)
+
+    def _out(self):
+        return BinaryDense(self.d_inner, self.d_model, partition="row",
+                           dtype=self.dtype)
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 2)
+        return {"in_proj": self._in().init(ks[0]),
+                "out_proj": self._out().init(ks[1]),
+                "f_bias": jnp.full((self.d_inner,), 3.0, jnp.float32)}
+
+    def specs(self, deploy: bool = False) -> Params:
+        i = self._in().deploy_specs() if deploy else self._in().specs()
+        o = self._out().deploy_specs() if deploy else self._out().specs()
+        return {"in_proj": i, "out_proj": o, "f_bias": P("model")}
+
+    def convert(self, params: Params) -> Params:
+        return {"in_proj": self._in().convert(params["in_proj"]),
+                "out_proj": self._out().convert(params["out_proj"]),
+                "f_bias": params["f_bias"]}
+
+    def init_cache(self, batch: int) -> XLSTMCache:
+        z = jnp.zeros((batch, self.d_inner), jnp.float32)
+        return XLSTMCache(z, z + 1e-6, z - 1e9)
+
+    def _cell(self, carry: XLSTMCache, zifo):
+        z, ig, fg, og = zifo
+        c, n, m = carry
+        log_f = -jax.nn.softplus(-fg + 0.0)
+        m_new = jnp.maximum(log_f + m, ig)
+        i_ = jnp.exp(ig - m_new)
+        f_ = jnp.exp(log_f + m - m_new)
+        c = f_ * c + i_ * jnp.tanh(z)
+        n = f_ * n + i_
+        h = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1.0)
+        return XLSTMCache(c, n, m_new), h
+
+    def _zifo(self, params: Params, x: Array, deploy: bool):
+        zi = _proj(self._in(), params["in_proj"], x, deploy)
+        z, ig, fg, og = jnp.split(zi.astype(jnp.float32), 4, axis=-1)
+        return z, ig, fg + params["f_bias"], og
+
+    def apply(self, params: Params, x: Array, *, deploy: bool = False,
+              return_state: bool = False):
+        b, l, _ = x.shape
+        z, ig, fg, og = self._zifo(params, x, deploy)
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (z, ig, fg, og))
+        last, hs = lax.scan(self._cell, self.init_cache(b), xs)
+        hs = jnp.moveaxis(hs, 0, 1)
+        out = _proj(self._out(), params["out_proj"],
+                    hs.astype(self.dtype), deploy)
+        return (out, last) if return_state else out
+
+    def decode_step(self, params: Params, x: Array, cache: XLSTMCache, *,
+                    deploy: bool = True) -> Tuple[Array, XLSTMCache]:
+        b = x.shape[0]
+        z, ig, fg, og = self._zifo(params, x, deploy)
+        cache, h = self._cell(cache, (z[:, 0], ig[:, 0], fg[:, 0], og[:, 0]))
+        out = _proj(self._out(), params["out_proj"],
+                    h[:, None].astype(self.dtype), deploy)
+        return out, cache

@@ -1,0 +1,69 @@
+"""1-bit gradient compression with error feedback — COBRA applied to the wire.
+
+The paper's thesis (1 bit/value + a scale recovers most of the signal) maps
+directly onto the DP gradient all-reduce: sign(g + e) with a per-tensor
+mean-|.| scale is 1/32 the bytes of fp32 (1/16 of bf16), and the error-
+feedback accumulator e keeps SGD/Adam convergent (Seide et al. 2014,
+Bernstein et al. 2018).
+
+Two layers:
+  * ``compress``/``decompress`` — the math, applied inside train_step before
+    the optimizer.  Under pjit the all-reduce XLA emits then moves sign-sized
+    tensors when the decompress is placed after the psum boundary via
+    shard_map (see ``allreduce_1bit``); in the plain jit path it is a
+    faithful *numerical* simulation whose wire saving is accounted
+    analytically in the roofline (collective_bytes / 32).
+  * ``allreduce_1bit`` — explicit shard_map collective: pack sign bits to
+    uint32 words, psum the *unpacked votes* per shard group... majority vote
+    is NOT linear, so instead we all-gather packed words (32x smaller than an
+    fp all-gather) and sum locally — bytes on the wire = n_shards * n/32
+    words vs n fp words for ring all-reduce; a win for n_shards < 32.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+Params = Any
+
+
+def compress(g: jax.Array, ef: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One tensor: returns (g_hat, new_ef).  g_hat = scale * sign(g + ef)."""
+    x = g.astype(jnp.float32) + ef
+    scale = jnp.mean(jnp.abs(x))
+    g_hat = jnp.where(x >= 0, scale, -scale)
+    return g_hat.astype(g.dtype), x - g_hat
+
+
+def compress_tree(grads: Params, ef: Params) -> Tuple[Params, Params]:
+    out = jax.tree.map(compress, grads, ef)
+    g_hat = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return g_hat, new_ef
+
+
+def init_error_feedback(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def allreduce_1bit(g_local: jax.Array, axis_name: str) -> jax.Array:
+    """Explicit 1-bit all-reduce body for use inside shard_map: pack local
+    sign bits, all-gather the packed words + scales, unpack and average.
+    g_local: any-shape local gradient shard."""
+    shape = g_local.shape
+    flat = g_local.reshape(-1)
+    scale = jnp.mean(jnp.abs(flat))
+    bits = packing.pack_bits((flat >= 0).astype(jnp.uint32)[None])[0]
+    all_bits = jax.lax.all_gather(bits, axis_name)       # (n, words)
+    all_scale = jax.lax.all_gather(scale, axis_name)     # (n,)
+    n = all_bits.shape[0]
+    vals = packing.unpack_bits(all_bits, flat.size)      # (n, size) {0,1}
+    signs = (2 * vals - 1).astype(jnp.float32)
+    avg = (signs * all_scale[:, None]).sum(0) / n
+    return avg.reshape(shape)

@@ -1,0 +1,99 @@
+"""BiT-style two-stage distillation + SPS threshold search driver.
+
+Paper pipeline (§III-A3):
+  1. fp teacher -> BiT student (softmax + elastic binarization attention),
+     trained with logit + hidden distillation ("precision-progressive").
+  2. Search per-head SPS thresholds lambda* minimizing the CDR between the
+     BiT student's attention probs and SPS probs on a 10% calibration set.
+  3. Freeze lambda, switch attention to SPS, fine-tune weights on the task.
+
+The benchmark (table1_accuracy.py) runs this end-to-end on a reduced BERT.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+
+from repro.core import sps as sps_lib
+
+Array = jax.Array
+Params = Any
+
+
+def kd_loss(student_logits: Array, teacher_logits: Array,
+            temperature: float = 2.0) -> Array:
+    t = temperature
+    sp = jax.nn.log_softmax(student_logits / t, axis=-1)
+    tp = jax.nn.softmax(teacher_logits / t, axis=-1)
+    return -(tp * sp).sum(-1).mean() * t * t
+
+
+def hidden_distill_loss(student_h: Array, teacher_h: Array) -> Array:
+    """MSE on (projected) hidden states, dimension-normalized."""
+    return jnp.mean((student_h - teacher_h) ** 2)
+
+
+def distill_loss(student_logits: Array, teacher_logits: Array,
+                 labels: Array, *, alpha: float = 0.9,
+                 temperature: float = 2.0) -> Array:
+    """alpha * KD + (1-alpha) * CE (BiT's logit distillation mix)."""
+    kd = kd_loss(student_logits, teacher_logits, temperature)
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(student_logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    ce = jnp.where(valid, nll, 0.0).sum() / jnp.maximum(valid.sum(), 1)
+    return alpha * kd + (1 - alpha) * ce
+
+
+# ---------------------------------------------------------------------------
+# SPS threshold search over a model (stage 2)
+# ---------------------------------------------------------------------------
+
+
+def search_model_thresholds(
+        collect_scores: Callable[[Params, Dict[str, Array]],
+                                 List[Tuple[Array, Array]]],
+        params: Params,
+        calib_batches: List[Dict[str, Array]],
+        *, granularity: str = "head") -> List[sps_lib.SPSCalibration]:
+    """collect_scores(params, batch) -> per-layer [(z, bit_probs)] from the
+    BiT-mode forward.  Searches lambda* per layer over the calibration set
+    (Eq. 6), pooling batches."""
+    per_layer_z: List[List[Array]] = []
+    per_layer_p: List[List[Array]] = []
+    for batch in calib_batches:
+        layers = collect_scores(params, batch)
+        if not per_layer_z:
+            per_layer_z = [[] for _ in layers]
+            per_layer_p = [[] for _ in layers]
+        for i, (z, p) in enumerate(layers):
+            per_layer_z[i].append(z)
+            per_layer_p[i].append(p)
+    out = []
+    for zs, ps in zip(per_layer_z, per_layer_p):
+        z = jnp.concatenate(zs, axis=0)
+        p = jnp.concatenate(ps, axis=0)
+        lam, c = sps_lib.search_thresholds(z, p, granularity=granularity)
+        out.append(sps_lib.SPSCalibration(lam=lam, cdr=c,
+                                          granularity=granularity))
+    return out
+
+
+def install_thresholds(params: Params, calibs: List[sps_lib.SPSCalibration],
+                       *, path: Tuple[str, ...] = ("blocks", "attn",
+                                                   "sps_lambda")) -> Params:
+    """Write searched lambdas into a stacked-blocks param tree."""
+    blocks_key, attn_key, lam_key = path
+    lam_stack = jnp.stack([c.lam for c in calibs])
+    new_blocks = dict(params[blocks_key])
+    new_attn = dict(new_blocks[attn_key])
+    cur = new_attn[lam_key]
+    new_attn[lam_key] = lam_stack.reshape(cur.shape).astype(cur.dtype)
+    new_blocks[attn_key] = new_attn
+    out = dict(params)
+    out[blocks_key] = new_blocks
+    return out

@@ -1,0 +1,30 @@
+"""LR schedules as pure step -> multiplier functions (jit-traceable)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def warmup_cosine(warmup: int, total: int, floor: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(math.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return f
+
+
+def warmup_linear(warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        lin = jnp.clip(1.0 - (s - warmup) / max(total - warmup, 1),
+                       floor, 1.0)
+        return jnp.where(s < warmup, warm, lin)
+    return f

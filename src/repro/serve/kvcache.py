@@ -1,0 +1,42 @@
+"""Binary KV-cache bookkeeping for the serving engine.
+
+The caches themselves live in the model layers (repro.models.attention
+KVCache rings, SSM states); this module sizes, counts and reports them —
+the deploy-memory story is the paper's headline number, so the engine
+surfaces it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import numpy as np
+
+
+def cache_bytes(caches: List[Dict[str, Any]]) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(caches))
+
+
+def cache_report(caches: List[Dict[str, Any]], *, seq_len: int,
+                 batch: int) -> Dict[str, float]:
+    total = cache_bytes(caches)
+    per_tok = total / max(seq_len * batch, 1)
+    bf16 = bf16_equivalent_bytes(caches)
+    return {"total_bytes": float(total),
+            "bytes_per_token": float(per_tok),
+            "bf16_equivalent_bytes": float(bf16),
+            "compression_vs_bf16": float(bf16) / max(total, 1)}
+
+
+def bf16_equivalent_bytes(caches: List[Dict[str, Any]]) -> int:
+    """What the same cache would cost with bf16 K/V (the paper's 16-32x
+    bandwidth argument, applied to decode state)."""
+    total = 0
+    for x in jax.tree.leaves(caches):
+        if x.dtype == np.uint32 or str(x.dtype) == "uint32":
+            # packed: 32 binary values per word -> bf16 would be 64 bytes
+            total += int(np.prod(x.shape)) * 64
+        else:
+            total += int(np.prod(x.shape)) * 2
+    return total

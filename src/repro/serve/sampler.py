@@ -1,0 +1,26 @@
+"""Token samplers (pure, jit-friendly)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def greedy(logits: Array, key=None) -> Array:
+    """logits (B, 1, V) -> (B, 1) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits: Array, key: Array, temp: float = 1.0) -> Array:
+    z = logits / jnp.maximum(temp, 1e-4)
+    return jax.random.categorical(key, z, axis=-1).astype(jnp.int32)
+
+
+def top_k(logits: Array, key: Array, k: int = 40,
+          temp: float = 1.0) -> Array:
+    vals, idx = jax.lax.top_k(logits, k)
+    pick = jax.random.categorical(key, vals / jnp.maximum(temp, 1e-4),
+                                  axis=-1)
+    return jnp.take_along_axis(idx, pick[..., None], axis=-1)[..., 0] \
+        .astype(jnp.int32)

@@ -1,0 +1,130 @@
+"""Fault tolerance: checkpoint/restart, straggler watchdog, elastic rescale.
+
+At 1000+ nodes the failure model is: (a) a host dies mid-run -> restart from
+the last committed checkpoint (async saves every N steps; the data stream is
+a pure function of its step counter, so resume is bit-exact); (b) a host is
+slow -> the watchdog's per-step EWMA flags it (on real fleets the action is
+re-scheduling; here the hook is pluggable and tested); (c) capacity changes
+-> the checkpoint is mesh-agnostic (plain per-leaf arrays + logical specs),
+so ``elastic_restore`` re-shards the same state onto a different mesh and
+training continues with a different data-parallel width.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.launch import mesh as mesh_lib
+from repro.train.trainer import Trainer, TrainState
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Restart
+# ---------------------------------------------------------------------------
+
+
+def restore_or_init(trainer: Trainer, ckpt: Checkpointer
+                    ) -> Tuple[TrainState, int, Dict]:
+    """Resume from the newest committed step, else fresh init.
+    Returns (state, data_step, extra)."""
+    step = ckpt.latest_step()
+    if step is None:
+        return trainer.init_state(), 0, {}
+    like = jax.eval_shape(trainer.init_state)
+    state, extra = ckpt.restore(step, like,
+                                shardings=trainer.state_shardings)
+    return state, int(extra.get("data_step", step)), extra
+
+
+def elastic_restore(ckpt: Checkpointer, trainer_new: Trainer
+                    ) -> Tuple[TrainState, int, Dict]:
+    """Restore the latest checkpoint onto trainer_new's (different) mesh.
+    Same state tree, new shardings — the checkpoint format makes rescale a
+    plain restore."""
+    step = ckpt.latest_step()
+    if step is None:
+        raise FileNotFoundError("no committed checkpoint to rescale from")
+    like = jax.eval_shape(trainer_new.init_state)
+    state, extra = ckpt.restore(step, like,
+                                shardings=trainer_new.state_shardings)
+    return state, int(extra.get("data_step", step)), extra
+
+
+# ---------------------------------------------------------------------------
+# Straggler watchdog
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """EWMA step-time monitor.  flag_factor x EWMA => straggler event."""
+    flag_factor: float = 2.0
+    ewma_alpha: float = 0.1
+    warmup_steps: int = 3
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+
+    def __post_init__(self):
+        self.ewma: Optional[float] = None
+        self.count = 0
+        self.flags = 0
+        self.history: list = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.count += 1
+        self.history.append(dt)
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        flagged = (self.count > self.warmup_steps and
+                   dt > self.flag_factor * self.ewma)
+        if flagged:
+            self.flags += 1
+            if self.on_straggler:
+                self.on_straggler(step, dt, self.ewma)
+        else:
+            # stragglers do not poison the baseline
+            self.ewma = (1 - self.ewma_alpha) * self.ewma + \
+                self.ewma_alpha * dt
+        return flagged
+
+
+# ---------------------------------------------------------------------------
+# Run loop
+# ---------------------------------------------------------------------------
+
+
+def run(trainer: Trainer, stream, ckpt: Checkpointer, *, steps: int,
+        ckpt_every: int = 50, log_every: int = 10,
+        watchdog: Optional[StragglerWatchdog] = None,
+        log_fn: Callable[[str], None] = print) -> TrainState:
+    """The production loop: restore -> step -> watchdog -> async checkpoint."""
+    state, data_step, _ = restore_or_init(trainer, ckpt)
+    stream.step = data_step
+    wd = watchdog or StragglerWatchdog()
+    start = int(jax.device_get(state.opt.step))
+    for step in range(start, steps):
+        # data is a pure function of the step index -> bit-exact resume
+        batch = stream.batch_at(stream.step)
+        stream.step += 1
+        t0 = time.perf_counter()
+        state, metrics = trainer.train_step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        wd.observe(step, dt)
+        if step % log_every == 0 or step == steps - 1:
+            log_fn(f"step {step} loss {float(metrics['loss']):.4f} "
+                   f"gnorm {float(metrics['grad_norm']):.3f} "
+                   f"dt {dt * 1e3:.1f}ms flags {wd.flags}")
+        if ckpt_every and (step + 1) % ckpt_every == 0:
+            ckpt.save(step + 1, state,
+                      extra={"data_step": stream.step})
+    ckpt.save(steps, state, blocking=True,
+              extra={"data_step": stream.step})
+    return state

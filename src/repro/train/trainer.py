@@ -1,0 +1,132 @@
+"""Distributed trainer: pjit train_step, grad accumulation, remat policy,
+optional 1-bit gradient compression, activation sharding context.
+
+Everything sharding-related is declared, not discovered: params get
+model.specs() + FSDP over the data axes; the optimizer state inherits the
+param specs (ZeRO); batches shard dim 0 over (pod, data).  One jit'd
+train_step with donated state is the whole hot loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.models.sharding import activation_sharding
+from repro.optim import compress as compress_lib
+from repro.optim.adamw import AdamW, AdamWState
+
+Params = Any
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: AdamWState
+    ef: Optional[Params]          # 1-bit compression error feedback
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    grad_accum: int = 1
+    compress_grads: bool = False
+    seed: int = 0
+
+
+class Trainer:
+    """Binds (model, optimizer, mesh) into jit'd train/eval steps."""
+
+    def __init__(self, model, optimizer: AdamW, mesh: Mesh,
+                 cfg: TrainerConfig = TrainerConfig()):
+        self.model = model
+        self.opt = optimizer
+        self.mesh = mesh
+        self.cfg = cfg
+        self._daxes = mesh_lib.data_axes(mesh)
+        # param specs: model sharding + FSDP over data axes (per-arch knob)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(cfg.seed))
+        if getattr(model.cfg, "fsdp", True):
+            self.param_specs = mesh_lib.fsdp_specs(model.specs(), shapes,
+                                                   mesh)
+        else:
+            self.param_specs = model.specs()
+        self.state_specs = TrainState(
+            params=self.param_specs,
+            opt=self.opt.state_specs(self.param_specs),
+            ef=self.param_specs if cfg.compress_grads else None)
+        self.state_shardings = mesh_lib.named(mesh, self.state_specs)
+        self._train_step = None
+        self._init_fn = None
+
+    # -- state ------------------------------------------------------------------
+
+    def init_state(self) -> TrainState:
+        def make():
+            params = self.model.init(jax.random.PRNGKey(self.cfg.seed))
+            opt = self.opt.init(params)
+            ef = (compress_lib.init_error_feedback(params)
+                  if self.cfg.compress_grads else None)
+            return TrainState(params, opt, ef)
+
+        with self.mesh:
+            with activation_sharding(self.mesh, self._daxes):
+                fn = jax.jit(make, out_shardings=self.state_shardings)
+                return fn()
+
+    # -- steps ------------------------------------------------------------------
+
+    def _loss_fn(self, params, batch):
+        loss, metrics = self.model.train_loss(params, batch)
+        return loss, metrics
+
+    def _build_train_step(self):
+        accum = self.cfg.grad_accum
+        grad_fn = jax.value_and_grad(self._loss_fn, has_aux=True)
+
+        def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+            if accum > 1:
+                def micro(c, mb):
+                    (l, m), g = grad_fn(state.params, mb)
+                    gsum, lsum = c
+                    return (jax.tree.map(jnp.add, gsum, g), lsum + l), m
+
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((accum, x.shape[0] // accum)
+                                        + x.shape[1:]), batch)
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  state.params)
+                (gsum, lsum), ms = jax.lax.scan(micro, (g0, 0.0), mbs)
+                grads = jax.tree.map(lambda g: g / accum, gsum)
+                metrics = jax.tree.map(lambda m: m[-1], ms)
+                metrics["loss_total"] = lsum / accum
+            else:
+                (loss, metrics), grads = grad_fn(state.params, batch)
+                metrics["loss_total"] = loss
+            ef = state.ef
+            if self.cfg.compress_grads:
+                grads, ef = compress_lib.compress_tree(grads, ef)
+            params, opt, om = self.opt.update(grads, state.opt, state.params)
+            metrics.update(om)
+            return TrainState(params, opt, ef), metrics
+
+        self._train_step = jax.jit(
+            step,
+            in_shardings=(self.state_shardings, None),
+            out_shardings=(self.state_shardings, None),
+            donate_argnums=(0,))
+
+    def train_step(self, state: TrainState, batch: Dict[str, np.ndarray]
+                   ) -> Tuple[TrainState, Dict[str, Any]]:
+        if self._train_step is None:
+            self._build_train_step()
+        dev_batch = jax.device_put(batch,
+                                   mesh_lib.batch_shardings(self.mesh, batch))
+        with self.mesh:
+            with activation_sharding(self.mesh, self._daxes):
+                state, metrics = self._train_step(state, dev_batch)
+        return state, metrics

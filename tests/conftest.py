@@ -1,0 +1,23 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 real CPU
+device by design; multi-device behaviour is tested via subprocesses that set
+--xla_force_host_platform_device_count themselves (test_distributed.py)."""
+import os
+
+import numpy as np
+import pytest
+
+# keep tests deterministic and quiet
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def subprocess_env(n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    return env

@@ -1,0 +1,151 @@
+"""Per-kernel allclose vs the pure-jnp oracles (interpret mode on CPU),
+swept over shapes, schemes and block sizes per the deliverable contract."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.kernels.pack import ops as pack_ops, ref as pack_ref
+from repro.kernels.rbmm import ops as rbmm_ops, ref as rbmm_ref
+from repro.kernels.rbmm_mxu import ops as mxu_ops, ref as mxu_ref
+from repro.kernels.sps_attn import ops as sa_ops, ref as sa_ref
+
+
+# ---------------------------------------------------------------------------
+# rbmm (VPU popcount kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,p", [(1, 32, 1), (5, 64, 7), (100, 96, 33),
+                                   (257, 160, 129)])
+@pytest.mark.parametrize("scheme", ["xnor", "and_dc"])
+def test_rbmm_kernel_shapes(m, k, p, scheme):
+    rng = np.random.default_rng(m * k + p)
+    b = rng.choice([-1, 1], size=(p, k)).astype(np.int32)
+    bp = packing.pack_bits(jnp.asarray((b > 0).astype(np.uint32)))
+    if scheme == "xnor":
+        a = rng.choice([-1, 1], size=(m, k)).astype(np.int32)
+        ap = packing.pack_bits(jnp.asarray((a > 0).astype(np.uint32)))
+    else:
+        a = rng.integers(0, 2, size=(m, k)).astype(np.int32)
+        ap = packing.pack_bits(jnp.asarray(a.astype(np.uint32)))
+    got = rbmm_ops.rbmm_int(ap, bp, k, scheme=scheme, bm=64, bn=64)
+    ref = rbmm_ref.rbmm_int(ap, bp, k, scheme=scheme)
+    np.testing.assert_array_equal(np.asarray(got), a @ b.T)
+    np.testing.assert_array_equal(np.asarray(ref), a @ b.T)
+
+
+@given(st.integers(1, 40), st.integers(1, 96), st.integers(1, 40),
+       st.booleans(), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_rbmm_kernel_binary_hypothesis(m, k, p, causal, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.choice([-1, 1], size=(m, k)).astype(np.int32)
+    b = rng.choice([-1, 1], size=(p, k)).astype(np.int32)
+    ap = packing.pack_signs(jnp.asarray(a))
+    bp = packing.pack_bits(jnp.asarray((b > 0).astype(np.uint32)))
+    theta = rng.integers(-4, 4, size=(p,)).astype(np.int32)
+    got, got_dc = rbmm_ops.rbmm_binary(ap, bp, k, jnp.asarray(theta),
+                                       causal=causal, bm=16, bn=16)
+    ref, ref_dc = rbmm_ref.rbmm_binary(ap, bp, k, jnp.asarray(theta),
+                                       causal=causal)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(got_dc), np.asarray(ref_dc))
+
+
+# ---------------------------------------------------------------------------
+# rbmm_mxu (packed-weight MXU kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,p,bk", [(1, 32, 8, 32), (16, 2048, 64, 512),
+                                      (130, 96, 70, 64), (7, 4096, 9, 1024)])
+def test_mxu_kernel_shapes(m, k, p, bk):
+    rng = np.random.default_rng(m + k + p)
+    a = rng.choice([-1.0, 1.0], size=(m, k)).astype(np.float32)
+    w = rng.choice([-1, 1], size=(p, k)).astype(np.int32)
+    wp = packing.pack_signs(jnp.asarray(w))
+    got = mxu_ops.rbmm_mxu(jnp.asarray(a), wp, bm=64, bn=64, bk=bk)
+    want = mxu_ref.rbmm_mxu(jnp.asarray(a), wp)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mxu_kernel_unsigned_activations():
+    """{0,1} activations (and_dc analogue) run on the same kernel."""
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 2, size=(9, 64)).astype(np.float32)
+    w = rng.choice([-1, 1], size=(5, 64)).astype(np.int32)
+    wp = packing.pack_signs(jnp.asarray(w))
+    got = mxu_ops.rbmm_mxu(jnp.asarray(a), wp, bm=8, bn=8, bk=32)
+    np.testing.assert_array_equal(np.asarray(got), a @ w.T.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sps_attn (fused binary attention)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h,l,dh", [(1, 32, 32), (3, 200, 64), (2, 65, 96)])
+@pytest.mark.parametrize("path", ["vpu", "mxu"])
+@pytest.mark.parametrize("causal", [True, False])
+def test_sps_attn_kernel(h, l, dh, path, causal):
+    rng = np.random.default_rng(h * l)
+    qv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
+    kv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
+    vv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
+    qb = packing.pack_signs(jnp.asarray(qv))
+    kb = packing.pack_signs(jnp.asarray(kv))
+    theta = jnp.asarray(rng.integers(-6, 6, size=(h,)).astype(np.int32))
+    want = sa_ref.sps_attention(qb, kb, jnp.asarray(vv), theta, d_h=dh,
+                                causal=causal)
+    if path == "vpu":
+        v_in = sa_ref.v_transpose_packed(jnp.asarray(vv))
+    else:
+        v_in = jnp.asarray(vv, jnp.bfloat16)
+    got = sa_ops.sps_attention(qb, kb, v_in, theta, d_h=dh, causal=causal,
+                               path=path, bq=64, bk=64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sps_attn_block_size_invariance():
+    """Tile-decoupled streaming: result independent of (bq, bk)."""
+    rng = np.random.default_rng(7)
+    h, l, dh = 2, 100, 32
+    qv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
+    kv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
+    vv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
+    qb, kb = (packing.pack_signs(jnp.asarray(qv)),
+              packing.pack_signs(jnp.asarray(kv)))
+    vt = sa_ref.v_transpose_packed(jnp.asarray(vv))
+    theta = jnp.zeros((h,), jnp.int32)
+    outs = [np.asarray(sa_ops.sps_attention(qb, kb, vt, theta, d_h=dh,
+                                            bq=bq, bk=bk))
+            for bq, bk in [(32, 32), (64, 96), (128, 64)]]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+
+
+# ---------------------------------------------------------------------------
+# pack (data packing conversion unit)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 64), st.integers(1, 300), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_kernel_hypothesis(m, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    theta = rng.normal(size=(k,)).astype(np.float32)
+    got = pack_ops.pack_threshold(jnp.asarray(x), jnp.asarray(theta),
+                                  bm=16, bw=2)
+    want = pack_ref.pack_threshold(jnp.asarray(x), jnp.asarray(theta))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pack_kernel_int_dtype():
+    x = np.arange(-8, 8, dtype=np.int32).reshape(1, 16)
+    theta = np.zeros((16,), np.int32)
+    got = pack_ops.pack_threshold(jnp.asarray(x), jnp.asarray(theta))
+    want = pack_ref.pack_threshold(jnp.asarray(x), jnp.asarray(theta))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,95 @@
+"""BinaryDense invariants: QAT forward == deploy forward (scale-exact twin,
+DESIGN.md §7.6), Eq. 10 fusion == unfused binarize, bias absorption."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.models.linear import BinaryDense
+
+
+def _params_with_noise(layer, seed):
+    rng = np.random.default_rng(seed)
+    p = layer.init(jax.random.PRNGKey(seed))
+    # randomize scales so the parity test isn't trivial
+    p["alpha_w"] = jnp.asarray(
+        rng.uniform(0.2, 2.0, size=(layer.out_dim,)).astype(np.float32))
+    if not layer.external_act:
+        p["act_alpha"] = jnp.float32(rng.uniform(0.3, 1.5))
+        p["act_beta"] = jnp.float32(rng.normal() * 0.1)
+    if layer.use_bias:
+        p["bias"] = jnp.asarray(
+            rng.normal(size=(layer.out_dim,)).astype(np.float32))
+    return p
+
+
+@given(st.integers(1, 6), st.sampled_from([32, 64, 96]),
+       st.sampled_from([8, 16]), st.booleans(), st.integers(0, 2**31 - 1),
+       st.sampled_from(["popcount", "mxu"]))
+@settings(max_examples=30, deadline=None)
+def test_qat_deploy_parity(m, k, p_out, bias, seed, impl):
+    layer = BinaryDense(k, p_out, use_bias=bias)
+    params = _params_with_noise(layer, seed % 1000)
+    dparams = layer.convert(params)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    y_qat = layer.apply(params, x)
+    y_dep = layer.apply_deploy(dparams, x, impl=impl)
+    np.testing.assert_allclose(np.asarray(y_qat), np.asarray(y_dep),
+                               rtol=0, atol=1e-4)
+
+
+@given(st.integers(1, 5), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_fused_signed_equals_unfused(m, seed):
+    """apply_deploy_fused output bits == (apply_deploy(x) >= next_beta)."""
+    k, p_out = 64, 16
+    layer = BinaryDense(k, p_out, use_bias=True)
+    params = _params_with_noise(layer, seed % 1000)
+    dparams = layer.convert(params)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    next_beta = jnp.float32(rng.normal() * 0.5)
+    bits, _ = layer.apply_deploy_fused(dparams, x, next_beta)
+    y = layer.apply_deploy(dparams, x)
+    want = packing.pack_bits((y >= next_beta).astype(jnp.uint32))
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(want))
+
+
+@given(st.integers(1, 5), st.floats(-1.0, 1.0), st.floats(0.1, 1.5),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_fused_unsigned_relu_equals_unfused(m, h_beta, h_alpha, seed):
+    """F1 fusion: bits == (relu(y) >= h_beta + h_alpha/2), including the
+    t <= 0 all-ones edge the paper's max(0, .) handles."""
+    k, p_out = 64, 12
+    layer = BinaryDense(k, p_out, use_bias=True)
+    params = _params_with_noise(layer, seed % 1000)
+    dparams = layer.convert(params)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    bits, dc = layer.apply_deploy_fused_unsigned(
+        dparams, x, jnp.float32(h_alpha), jnp.float32(h_beta))
+    y = np.asarray(layer.apply_deploy(dparams, x))
+    want_bits = (np.maximum(y, 0.0) >= h_beta + 0.5 * h_alpha
+                 ).astype(np.uint32)
+    want = packing.pack_bits(jnp.asarray(want_bits))
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(dc),
+                                  p_out - want_bits.sum(-1))
+
+
+def test_gradients_flow():
+    layer = BinaryDense(32, 8)
+    params = layer.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=(4, 32)).astype(np.float32))
+
+    def loss(p):
+        return (layer.apply(p, x) ** 2).sum()
+
+    g = jax.grad(loss)(params)
+    gn = sum(float(jnp.abs(v).sum()) for v in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0

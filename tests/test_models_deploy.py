@@ -1,0 +1,113 @@
+"""Deploy-face invariants per arch family (DESIGN.md §7.6/7.7):
+QAT forward == packed deploy forward; decode step t == prefill position t."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.models.lm import build_model
+
+# representative arch per family (full matrix runs in the inline CI sweep;
+# these keep the pytest wall-time sane)
+ARCHS = ["smollm-135m", "mixtral-8x22b", "gemma3-27b", "hymba-1.5b",
+         "xlstm-350m", "qwen1.5-32b", "bert-base-cobra"]
+
+
+def _setup(arch, b=2, s=20, seed=0):
+    cfg = base.get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    dparams = model.convert(params)
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    fe = None
+    if cfg.frontend_tokens:
+        fe = jnp.asarray(rng.standard_normal(
+            (b, cfg.frontend_tokens, model.frontend_dim), dtype=np.float32))
+    return cfg, model, params, dparams, tokens, fe
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_qat_equals_deploy(arch):
+    cfg, model, params, dparams, tokens, fe = _setup(arch)
+    kw = {} if fe is None else {"frontend_embeds": fe}
+    lq = model.qat_logits(params, tokens, **kw)
+    ld = model.prefill_logits(dparams, tokens, **kw)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(ld), atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if a != "bert-base-cobra"])
+def test_decode_equals_prefill(arch):
+    cfg, model, params, dparams, tokens, fe = _setup(arch)
+    b, s = tokens.shape
+    kw = {} if fe is None else {"frontend_embeds": fe}
+    max_len = s + 4 + cfg.frontend_tokens
+    full = model.prefill_logits(dparams, tokens, **kw)
+    _, caches = model.prefill_with_cache(dparams, tokens[:, :s - 1],
+                                         max_len=max_len, **kw)
+    step, caches = model.decode_step(dparams, tokens[:, s - 1:s], caches)
+    np.testing.assert_allclose(np.asarray(step[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-3)
+
+
+def test_decode_multi_step_chain():
+    """Three consecutive decode steps match the teacher-forced prefill."""
+    cfg, model, params, dparams, tokens, fe = _setup("smollm-135m", s=16)
+    b, s = tokens.shape
+    full = model.prefill_logits(dparams, tokens)
+    _, caches = model.prefill_with_cache(dparams, tokens[:, :s - 3],
+                                         max_len=s + 4)
+    for i in range(3):
+        pos = s - 3 + i
+        step, caches = model.decode_step(dparams, tokens[:, pos:pos + 1],
+                                         caches)
+        np.testing.assert_allclose(np.asarray(step[:, 0]),
+                                   np.asarray(full[:, pos]), atol=2e-3,
+                                   err_msg=f"step {i}")
+
+
+def test_swa_ring_evicts_correctly():
+    """mixtral smoke has window 16: a decode past the window must match a
+    windowed prefill, proving ring eviction == mask semantics."""
+    cfg, model, params, dparams, tokens, fe = _setup("mixtral-8x22b", s=24)
+    b, s = tokens.shape
+    full = model.prefill_logits(dparams, tokens)
+    _, caches = model.prefill_with_cache(dparams, tokens[:, :s - 1],
+                                         max_len=cfg.window_size)
+    step, _ = model.decode_step(dparams, tokens[:, s - 1:s], caches)
+    np.testing.assert_allclose(np.asarray(step[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-3)
+
+
+def test_encdec_decode_matches_prefill():
+    cfg = base.get_smoke_config("seamless-m4t-large-v2")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dparams = model.convert(params)
+    rng = np.random.default_rng(0)
+    b, s = 2, 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    fe = jnp.asarray(rng.standard_normal(
+        (b, cfg.frontend_tokens, model.frontend_dim), dtype=np.float32))
+    full = model.prefill_logits(dparams, tokens, frontend_embeds=fe)
+    _, caches = model.prefill_with_cache(dparams, tokens[:, :s - 1],
+                                         max_len=s + 4, frontend_embeds=fe)
+    step, _ = model.decode_step(dparams, tokens[:, s - 1:s], caches)
+    np.testing.assert_allclose(np.asarray(step[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-3)
+
+
+def test_deploy_weights_are_packed():
+    """Deploy weight bytes ~ 1/32 of latent fp32 (the paper's memory win)."""
+    cfg, model, params, dparams, *_ = _setup("smollm-135m")
+
+    def matmul_bytes(tree, key):
+        return sum(np.prod(x.shape) * x.dtype.itemsize
+                   for path, x in jax.tree_util.tree_flatten_with_path(tree)[0]
+                   if key in jax.tree_util.keystr(path))
+
+    latent = matmul_bytes(params, "w_latent")
+    packed = matmul_bytes(dparams, "w_packed")
+    assert packed * 100 < latent * 4  # >= 25x smaller

@@ -1,0 +1,92 @@
+"""REQUIRED per-arch smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.models.lm import build_model, padded_vocab
+
+
+def _batch(cfg, model, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                              jnp.int32),
+    }
+    if cfg.frontend_tokens:
+        batch["frontend_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_tokens, model.frontend_dim),
+                                dtype=np.float32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", base.ARCH_IDS)
+def test_arch_forward_and_train_step(arch):
+    cfg = base.get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = _batch(cfg, model, b, s)
+
+    # forward: logits shape + finite
+    if cfg.family == "audio":
+        logits, _ = jax.value_and_grad(
+            lambda p: model.train_loss(p, batch)[0])(params), None
+        loss, metrics = model.train_loss(params, batch)
+    else:
+        lg = model.qat_logits(params, batch["tokens"],
+                              frontend_embeds=batch.get("frontend_embeds"))
+        exp_s = s + (cfg.frontend_tokens if cfg.frontend_tokens else 0)
+        assert lg.shape == (b, exp_s, cfg.vocab_size), lg.shape
+        assert bool(jnp.isfinite(lg.astype(jnp.float32)).all())
+        loss, metrics = model.train_loss(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(metrics["tokens"]) > 0
+
+    # one SGD step moves the loss
+    grads = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all()) for g in flat)
+    new_params = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype),
+                              params, grads)
+    loss2, _ = model.train_loss(new_params, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", base.ARCH_IDS)
+def test_arch_full_config_consistency(arch):
+    """The FULL config matches the assignment numbers (no allocation)."""
+    cfg = base.get_config(arch)
+    assert cfg.name == arch
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n_leaves = len(jax.tree.leaves(shapes))
+    assert n_leaves > 10
+    # embedding padded to a multiple of 256 and holds d_model columns
+    emb = shapes["embed"]["embedding"]
+    assert emb.shape == (padded_vocab(cfg.vocab_size), cfg.d_model)
+
+
+def test_param_counts_sane():
+    """Analytic parameter counts are in the right ballpark per arch name."""
+    expect = {"smollm-135m": (0.1e9, 0.25e9),
+              "granite-3-2b": (2e9, 4e9),
+              "qwen1.5-32b": (28e9, 40e9),
+              "internvl2-76b": (60e9, 90e9),
+              "mixtral-8x22b": (120e9, 160e9),
+              "arctic-480b": (420e9, 540e9),
+              "xlstm-350m": (0.25e9, 0.5e9)}
+    for arch, (lo, hi) in expect.items():
+        n = base.get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+
+
+def test_moe_active_params():
+    cfg = base.get_config("mixtral-8x22b")
+    assert cfg.active_param_count() < 0.45 * cfg.param_count()
+    cfg = base.get_config("arctic-480b")
+    assert cfg.active_param_count() < 0.15 * cfg.param_count()

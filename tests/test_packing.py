@@ -1,0 +1,57 @@
+"""Packing invariants (DESIGN.md §7.5): roundtrip identity, pad-bit safety,
+don't-care counts — hypothesis-swept."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+
+@given(st.integers(1, 4), st.integers(1, 200))
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_roundtrip(rows, k):
+    rng = np.random.default_rng(rows * 1000 + k)
+    bits = rng.integers(0, 2, size=(rows, k)).astype(np.uint32)
+    packed = packing.pack_bits(jnp.asarray(bits))
+    assert packed.shape == (rows, packing.packed_len(k))
+    back = packing.unpack_bits(packed, k)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+@given(st.integers(1, 130))
+@settings(max_examples=30, deadline=None)
+def test_pack_signs_sign_of_zero_is_one(k):
+    """Paper: 'the sign of zero is deemed as 1'."""
+    x = np.zeros((1, k), np.float32)
+    packed = packing.pack_signs(jnp.asarray(x))
+    vals = packing.unpack_signs(packed, k)
+    np.testing.assert_array_equal(np.asarray(vals), np.ones((1, k)))
+
+
+@given(st.integers(1, 100), st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_dc_count_true_region(k, seed):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, 2, size=(3, k)).astype(np.uint32)
+    packed = packing.pack_bits(jnp.asarray(u), pad_value=0)
+    dc = packing.dc_count(packed, k)
+    want = k - u.sum(axis=1)
+    np.testing.assert_array_equal(np.asarray(dc), want)
+
+
+def test_pad_values_respected():
+    bits = jnp.ones((1, 5), jnp.uint32)
+    p0 = packing.pack_bits(bits, pad_value=0)
+    p1 = packing.pack_bits(bits, pad_value=1)
+    assert int(p0[0, 0]) == 0b11111
+    assert int(p1[0, 0]) == 0xFFFFFFFF
+
+
+def test_unpack_signs_dtype():
+    x = np.asarray([[1.0, -2.0, 0.0, 3.0]], np.float32)
+    packed = packing.pack_signs(jnp.asarray(x))
+    vals = packing.unpack_signs(packed, 4, dtype=jnp.bfloat16)
+    assert vals.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(vals, np.float32),
+                                  [[1, -1, 1, 1]])

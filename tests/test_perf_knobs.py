@@ -1,0 +1,74 @@
+"""Every §Perf optimization knob must be numerically invisible: the knobs
+change sharding/execution structure, never results."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.models.lm import build_model
+
+
+def _logits_pair(arch, **cfg_changes):
+    cfg0 = base.get_smoke_config(arch)
+    binary_changes = {k[7:]: v for k, v in cfg_changes.items()
+                      if k.startswith("binary_")}
+    plain = {k: v for k, v in cfg_changes.items()
+             if not k.startswith("binary_")}
+    cfg1 = cfg0.with_(**plain)
+    if binary_changes:
+        cfg1 = cfg1.with_(binary=dataclasses.replace(cfg1.binary,
+                                                     **binary_changes))
+    m0, m1 = build_model(cfg0), build_model(cfg1)
+    params = m0.init(jax.random.PRNGKey(0))
+    d0, d1 = m0.convert(params), m1.convert(params)
+    tokens = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg0.vocab_size, (2, 16)), jnp.int32)
+    return (m0.prefill_logits(d0, tokens), m1.prefill_logits(d1, tokens),
+            (m0, d0, m1, d1, tokens))
+
+
+def test_gather_bits_collectives_exact():
+    l0, l1, _ = _logits_pair("mixtral-8x22b",
+                             binary_gather_bits_collectives=True)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=1e-5)
+
+
+def test_moe_dispatch_bits_exact():
+    l0, l1, _ = _logits_pair("mixtral-8x22b", binary_moe_dispatch_bits=True)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
+def test_grouped_gqa_decode_exact():
+    cfg0 = base.get_smoke_config("mixtral-8x22b")
+    cfg1 = cfg0.with_(decode_grouped_gqa=True)
+    m0, m1 = build_model(cfg0), build_model(cfg1)
+    params = m0.init(jax.random.PRNGKey(0))
+    dp = m0.convert(params)
+    tokens = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg0.vocab_size, (2, 12)), jnp.int32)
+    _, c0 = m0.prefill_with_cache(dp, tokens[:, :11], max_len=20)
+    _, c1 = m1.prefill_with_cache(dp, tokens[:, :11], max_len=20)
+    s0, _ = m0.decode_step(dp, tokens[:, 11:12], c0)
+    s1, _ = m1.decode_step(dp, tokens[:, 11:12], c1)
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_window_chunking_exact():
+    l0, l1, _ = _logits_pair("hymba-1.5b", window_chunking=False)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=1e-5)
+
+
+def test_act_shard_knob_exact():
+    l0, l1, _ = _logits_pair("smollm-135m", act_shard="none")
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
+def test_all_knobs_stacked_exact():
+    """The full beyond-paper configuration == baseline numerics."""
+    l0, l1, _ = _logits_pair(
+        "mixtral-8x22b", act_shard="none", decode_grouped_gqa=True,
+        binary_gather_bits_collectives=True, binary_moe_dispatch_bits=True)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=1e-5)

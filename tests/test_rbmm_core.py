@@ -1,0 +1,110 @@
+"""RBMM exactness invariants (DESIGN.md §7.1-7.3), hypothesis-swept:
+Eq. 7 both schemes x all impls == integer ground truth; Eq. 8 split-K;
+Eq. 10 quantization fusion; Eq. 11 blocked FFN."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing, rbmm
+
+
+def _signed(rng, m, k):
+    return rng.choice([-1, 1], size=(m, k)).astype(np.int32)
+
+
+def _unsigned(rng, m, k):
+    return rng.integers(0, 2, size=(m, k)).astype(np.int32)
+
+
+@given(st.integers(1, 20), st.integers(1, 200), st.integers(1, 20),
+       st.sampled_from(["popcount", "mxu"]),
+       st.sampled_from(["xnor", "and_dc"]), st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_rbmm_int_exact(m, k, p, impl, scheme, seed):
+    rng = np.random.default_rng(seed)
+    b = _signed(rng, p, k)
+    bp = packing.pack_bits(jnp.asarray((b > 0).astype(np.uint32)))
+    if scheme == "xnor":
+        a = _signed(rng, m, k)
+        ap = packing.pack_bits(jnp.asarray((a > 0).astype(np.uint32)),
+                               pad_value=0)
+    else:
+        a = _unsigned(rng, m, k)
+        ap = packing.pack_bits(jnp.asarray(a.astype(np.uint32)), pad_value=0)
+    got = rbmm.rbmm_int(ap, bp, k, scheme=scheme, impl=impl)
+    np.testing.assert_array_equal(np.asarray(got), a @ b.T)
+
+
+@given(st.integers(1, 8), st.sampled_from([64, 96, 192]),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_split_k_composition(m, k, seed):
+    """Eq. 8: partial RBVMs over word chunks sum to the full product."""
+    rng = np.random.default_rng(seed)
+    a, b = _signed(rng, m, k), _signed(rng, 5, k)
+    ap, bp = (packing.pack_signs(jnp.asarray(a)),
+              packing.pack_signs(jnp.asarray(b)))
+    for splits in (1, 2, k // 32):
+        if (k // 32) % splits:
+            continue
+        got = rbmm.rbmm_int_split_k(ap, bp, k, splits)
+        np.testing.assert_array_equal(np.asarray(got), a @ b.T)
+
+
+@given(st.integers(1, 10), st.integers(1, 100), st.integers(1, 12),
+       st.sampled_from(["popcount", "mxu"]), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_quantization_fusion(m, k, p, impl, seed):
+    """Eq. 10: fused threshold output == binarize(integer output)."""
+    rng = np.random.default_rng(seed)
+    a, b = _signed(rng, m, k), _signed(rng, p, k)
+    ap = packing.pack_bits(jnp.asarray((a > 0).astype(np.uint32)),
+                           pad_value=0)
+    bp = packing.pack_bits(jnp.asarray((b > 0).astype(np.uint32)))
+    theta = rng.integers(-k, k + 1, size=(p,)).astype(np.int32)
+    bits, dc = rbmm.rbmm_binary(ap, bp, k, jnp.asarray(theta), impl=impl,
+                                return_dc=True, pack_output=False)
+    want = (a @ b.T >= theta).astype(np.uint32)
+    np.testing.assert_array_equal(np.asarray(bits), want)
+    np.testing.assert_array_equal(np.asarray(dc), p - want.sum(-1))
+
+
+@given(st.integers(1, 6), st.sampled_from([32, 64]),
+       st.sampled_from([1, 2, 4]), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_ffn_blocked_eq11(m, d, r, seed):
+    """Eq. 11: R-blocked ReLU FFN == unblocked reference, exactly."""
+    rng = np.random.default_rng(seed)
+    ff = d * 4
+    x = _signed(rng, m, d)
+    y = _signed(rng, ff, d)       # W1 columns
+    z = rng.choice([-1, 1], size=(r, d, ff // r)).astype(np.int32)
+    theta1 = np.maximum(0, rng.integers(-5, 6, size=(ff,))).astype(np.int32)
+    xp = packing.pack_signs(jnp.asarray(x))
+    yp = packing.pack_signs(jnp.asarray(y))
+    zp = packing.pack_signs(jnp.asarray(z))
+    got = rbmm.ffn_blocked(xp, yp, zp, d, jnp.asarray(theta1), r)
+    h = (x @ y.T >= theta1).astype(np.int32)
+    want = sum(h[:, i * (ff // r):(i + 1) * (ff // r)] @ z[i].T
+               for i in range(r))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_batched_rbmm():
+    """Leading batch dims broadcast (the MoE expert-stack contract)."""
+    rng = np.random.default_rng(0)
+    e, c, k, p = 3, 4, 64, 8
+    a = rng.choice([-1, 1], size=(e, c, k)).astype(np.int32)
+    b = rng.choice([-1, 1], size=(e, p, k)).astype(np.int32)
+    ap = packing.pack_signs(jnp.asarray(a))
+    bp = packing.pack_signs(jnp.asarray(b))
+    got = rbmm.rbmm_int(ap, bp, k)
+    want = np.einsum("eck,epk->ecp", a, b)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_auto_impl_dispatch():
+    assert rbmm.resolve_impl("auto", 1) == "popcount"
+    assert rbmm.resolve_impl("auto", 4096) == "mxu"
+    assert rbmm.resolve_impl("popcount", 4096) == "popcount"

@@ -1,0 +1,84 @@
+"""Roofline machinery unit tests: HLO collective parsing, term math,
+the 40-cell accounting of the assignment."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.launch import roofline
+
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[512,256]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}
+  %ar = f32[128,256]{1,0} all-reduce(%p0), to_apply=%add
+  %rs = bf16[32,256]{1,0} reduce-scatter(%p0), dimensions={0}
+  %a2a = u32[16,16]{1,0} all-to-all(%p0)
+  %cp = f32[8]{0} collective-permute(%p0)
+  %dot = f32[128,128]{1,0} dot(%p0, %p0)
+}
+"""
+
+
+def test_parse_collectives():
+    got = roofline.parse_collectives(HLO_SAMPLE)
+    assert got["all-gather"] == 512 * 256 * 4
+    assert got["all-reduce"] == 128 * 256 * 4
+    assert got["reduce-scatter"] == 32 * 256 * 2
+    assert got["all-to-all"] == 16 * 16 * 4
+    assert got["collective-permute"] == 8 * 4
+
+
+def test_parse_ignores_non_collectives():
+    got = roofline.parse_collectives("%d = f32[4]{0} dot(%a, %b)")
+    assert sum(got.values()) == 0
+
+
+def test_terms_math():
+    art = {"flops": 197e12, "bytes_accessed": 819e9,
+           "collectives": {"all-reduce": 50e9}}
+    cfg = base.get_config("smollm-135m")
+    shape = base.SHAPES["train_4k"]
+    t = roofline.terms_from_artifact(art, cfg, shape, "train")
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(1.0)
+    assert t.model_flops == pytest.approx(
+        6.0 * cfg.active_param_count() * shape.global_batch * shape.seq_len)
+
+
+def test_dominant_term():
+    art = {"flops": 1e12, "bytes_accessed": 819e9 * 10,
+           "collectives": {}}
+    t = roofline.terms_from_artifact(art)
+    assert t.dominant == "memory"
+    assert t.step_time_s == pytest.approx(10.0)
+
+
+def test_40_cell_accounting():
+    """10 assigned archs x 4 shapes = 40 cells; long_500k skips exactly the
+    full-attention archs per DESIGN.md §Arch-applicability."""
+    assigned = [a for a in base.ARCH_IDS if a != "bert-base-cobra"]
+    assert len(assigned) == 10
+    total = len(assigned) * len(base.SHAPES)
+    assert total == 40
+    runnable = sum(len(base.valid_shapes(base.get_config(a)))
+                   for a in assigned)
+    long_runners = {"mixtral-8x22b", "gemma3-27b", "hymba-1.5b",
+                    "xlstm-350m"}
+    assert runnable == 30 + len(long_runners)
+    for a in assigned:
+        cfg = base.get_config(a)
+        has_long = "long_500k" in base.valid_shapes(cfg)
+        assert has_long == (a in long_runners), a
+
+
+def test_model_flops_faces():
+    cfg = base.get_config("smollm-135m")
+    tr = roofline.model_flops(cfg, base.SHAPES["train_4k"], "train")
+    pf = roofline.model_flops(cfg, base.SHAPES["prefill_32k"], "prefill")
+    dc = roofline.model_flops(cfg, base.SHAPES["decode_32k"], "decode")
+    assert tr == pytest.approx(3 * 6.98 * pf / 6.98, rel=1)  # same order
+    assert dc < pf / 1000

@@ -1,0 +1,89 @@
+"""SPS function + threshold search (paper §III-A): search recovers a planted
+threshold, granularities shape correctly, integer folding is exact."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sps
+
+
+def test_sps_is_step():
+    z = jnp.asarray([-1.0, 0.0, 0.2, 0.99, 1.0])
+    out = sps.sps(z, jnp.asarray(0.2))
+    np.testing.assert_array_equal(np.asarray(out), [0, 0, 1, 1, 1])
+
+
+def test_sps_ste_gradient_window():
+    z = jnp.asarray([0.0, 0.5, 3.0])
+    lam = jnp.asarray(0.4)
+    g = jax.grad(lambda zz: sps.sps_ste(zz, lam).sum())(z)
+    # |z - lam| <= 1 passes gradient
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 1.0, 0.0])
+
+
+@pytest.mark.parametrize("granularity,shape", [
+    ("layer", ()), ("head", (4,)), ("row", (4, 8))])
+def test_search_shapes(granularity, shape):
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(2, 4, 8, 8)).astype(np.float32))
+    target = sps.att_prob_bit(z, 0.5)
+    lam, c = sps.search_thresholds(z, target, granularity=granularity)
+    assert lam.shape == shape
+    assert c.shape == shape
+
+
+def test_search_recovers_planted_threshold():
+    """If the target IS an SPS output, the search must find that lambda."""
+    rng = np.random.default_rng(1)
+    z = jnp.asarray(rng.uniform(-0.5, 1.5, size=(4, 3, 16, 16))
+                    .astype(np.float32))
+    planted = jnp.asarray([0.15, 0.5, 0.85])
+    target = sps.sps(z, planted[None, :, None, None])
+    lam, c = sps.search_thresholds(z, target, granularity="head")
+    np.testing.assert_allclose(np.asarray(lam), np.asarray(planted),
+                               atol=0.051)
+    assert float(c.max()) <= 0.05
+
+
+@given(st.floats(0.0, 1.0), st.floats(0.05, 2.0), st.floats(0.05, 2.0),
+       st.integers(8, 96))
+@settings(max_examples=30, deadline=None)
+def test_integer_threshold_folding(lam, aq, ak, dh):
+    """c >= theta  <=>  aq*ak*c/sqrt(dh) >= lam, for all integer c (away
+    from f32 rounding boundaries — the fold is exact in exact arithmetic)."""
+    theta = sps.integer_threshold(jnp.float32(lam), dh, jnp.float32(aq),
+                                  jnp.float32(ak))
+    cs = np.arange(-dh, dh + 1)
+    scale = aq * ak / np.sqrt(dh)
+    margin = np.abs(scale * cs - lam) > 1e-5 * max(1.0, abs(lam))
+    lhs = (cs >= float(theta))[margin]
+    rhs = ((scale * cs) >= lam)[margin]
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_att_prob_bit_matches_paper_form():
+    z = jnp.asarray(np.random.default_rng(2).normal(size=(1, 2, 8, 8))
+                    .astype(np.float32))
+    p = jax.nn.softmax(z, axis=-1)
+    want = np.clip(np.round(np.asarray(p) / 0.5), 0, 1)
+    got = sps.att_prob_bit(z, 0.5)
+    np.testing.assert_allclose(np.asarray(got), want)
+
+
+def test_similarity_report_self_is_one():
+    rng = np.random.default_rng(3)
+    p = jnp.asarray(rng.integers(0, 2, size=(2, 2, 8, 8)).astype(np.float32))
+    rep = sps.similarity_report(p, p)
+    assert rep["cosine"] > 0.999
+    assert rep["pearson"] > 0.999
+
+
+def test_calibrate_layer_end_to_end():
+    rng = np.random.default_rng(4)
+    z = jnp.asarray(rng.normal(size=(2, 3, 12, 12)).astype(np.float32))
+    cal = sps.calibrate_layer(z, granularity="head")
+    assert cal.lam.shape == (3,)
+    lamb = cal.lam_broadcast()
+    assert lamb.shape == (3, 1, 1)

@@ -1,0 +1,99 @@
+"""Training substrate: loss decreases on structured data, grad-accum
+equivalence, 1-bit gradient compression convergence (DESIGN.md §7.9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.data.synthetic import SyntheticStream
+from repro.launch import mesh as mesh_lib
+from repro.models.lm import build_model
+from repro.optim import compress
+from repro.optim.adamw import AdamW
+from repro.optim.schedules import warmup_cosine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _trainer(arch="smollm-135m", **kw):
+    cfg = base.get_smoke_config(arch)
+    model = build_model(cfg)
+    mesh = mesh_lib.make_host_mesh()
+    opt = AdamW(lr=3e-3, schedule=warmup_cosine(5, 100))
+    return cfg, model, Trainer(model, opt, mesh, TrainerConfig(**kw))
+
+
+def test_loss_decreases_on_bigram_data():
+    cfg, model, tr = _trainer()
+    stream = SyntheticStream(cfg, seq_len=32, global_batch=8, seed=0)
+    state = tr.init_state()
+    losses = []
+    for step in range(25):
+        state, m = tr.train_step(state, stream.batch_at(step))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_grad_accum_matches_full_batch():
+    cfg, model, tr1 = _trainer(grad_accum=1)
+    _, _, tr2 = _trainer(grad_accum=2)
+    stream = SyntheticStream(cfg, seq_len=16, global_batch=8, seed=1)
+    batch = stream.batch_at(0)
+    s1 = tr1.init_state()
+    s2 = tr2.init_state()
+    s1, m1 = tr1.train_step(s1, batch)
+    s2, m2 = tr2.train_step(s2, batch)
+    # same data, same init -> nearly identical params after one step
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                     s1.params, s2.params)
+    assert max(jax.tree.leaves(d)) < 2e-5
+
+
+def test_compression_error_feedback_converges():
+    """sign-SGD with error feedback minimizes a quadratic."""
+    rng = np.random.default_rng(0)
+    target = jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+    x = jnp.zeros((32,))
+    ef = jnp.zeros((32,))
+    for _ in range(300):
+        g = x - target
+        g_hat, ef = compress.compress(g, ef)
+        x = x - 0.05 * g_hat
+    assert float(jnp.linalg.norm(x - target)) < 0.1
+
+
+def test_compress_tree_shapes():
+    params = {"a": jnp.ones((4, 4)), "b": jnp.ones((3,))}
+    ef = compress.init_error_feedback(params)
+    g_hat, ef2 = compress.compress_tree(params, ef)
+    assert jax.tree.structure(g_hat) == jax.tree.structure(params)
+    # sign compression preserves the mean-|.| scale
+    assert float(jnp.abs(g_hat["a"]).mean()) == pytest.approx(1.0)
+
+
+def test_trainer_with_compression_trains():
+    cfg, model, tr = _trainer(compress_grads=True)
+    stream = SyntheticStream(cfg, seq_len=32, global_batch=8, seed=2)
+    state = tr.init_state()
+    losses = []
+    for step in range(20):
+        state, m = tr.train_step(state, stream.batch_at(step))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+def test_stream_determinism_and_structure():
+    cfg = base.get_smoke_config("smollm-135m")
+    s1 = SyntheticStream(cfg, 16, 4, seed=7)
+    s2 = SyntheticStream(cfg, 16, 4, seed=7)
+    b1, b2 = s1.batch_at(5), s2.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    assert (b1["labels"][:, -1] == -1).all()
+    # bigram structure: every transition comes from the successor table
+    succ = s1._succ
+    toks = b1["tokens"]
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            assert b in succ[a]

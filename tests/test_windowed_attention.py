@@ -1,0 +1,53 @@
+"""The O(S*W) static-window chunked attention must equal the dense-masked
+path exactly, in both QAT and deploy faces (the SWA-prefill optimization)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import SPSAttention
+
+
+def _mk(q_chunk):
+    return SPSAttention(d_model=64, num_heads=4, num_kv_heads=2,
+                        head_dim=16, use_rope=True, q_chunk=q_chunk)
+
+
+@pytest.mark.parametrize("window", [8, 24])
+def test_qat_windowed_equals_dense(window):
+    attn_small = _mk(q_chunk=8)    # kwin = window + 8 < 64 -> sliced path
+    attn_dense = _mk(q_chunk=64)   # kwin inactive -> dense mask path
+    params = attn_small.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=(2, 64, 64)).astype(np.float32))
+    y_win, _ = attn_small.qat(params, x, window=window)
+    y_dense, _ = attn_dense.qat(params, x, window=window)
+    np.testing.assert_allclose(np.asarray(y_win), np.asarray(y_dense),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [8, 24])
+def test_deploy_windowed_equals_dense(window):
+    attn_small = _mk(q_chunk=8)
+    attn_dense = _mk(q_chunk=64)
+    params = attn_small.init(jax.random.PRNGKey(1))
+    dparams = attn_small.convert(params)
+    x = jnp.asarray(np.random.default_rng(1)
+                    .normal(size=(2, 64, 64)).astype(np.float32))
+    y_win, _ = attn_small.deploy_prefill(dparams, x, window=window)
+    y_dense, _ = attn_dense.deploy_prefill(dparams, x, window=window)
+    np.testing.assert_allclose(np.asarray(y_win), np.asarray(y_dense),
+                               atol=1e-5)
+
+
+def test_windowed_deploy_matches_qat():
+    attn = _mk(q_chunk=8)
+    params = attn.init(jax.random.PRNGKey(2))
+    dparams = attn.convert(params)
+    x = jnp.asarray(np.random.default_rng(2)
+                    .normal(size=(1, 48, 64)).astype(np.float32))
+    yq, _ = attn.qat(params, x, window=16)
+    yd, _ = attn.deploy_prefill(dparams, x, window=16)
+    np.testing.assert_allclose(np.asarray(yq), np.asarray(yd), atol=1e-4)
