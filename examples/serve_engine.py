@@ -1,8 +1,13 @@
-"""Batched binary-cache serving demo across architecture families.
+"""Continuous-batching serving demo on pooled binary KV caches.
 
-Prefills a batch of prompts and streams greedy decode steps through the
-fully binary KV path (K packed along d_h, V^T packed along the sequence,
-probs packed in flight), reporting tokens/s and the cache-memory win.
+Feeds a mixed-length request stream through the slot-pool engine: requests
+admit into free cache slots (ragged right-padded prefill), decode in ONE
+pooled step per token through the fully binary KV path (K packed along d_h,
+V^T packed along the sequence, probs packed in flight), and retire on their
+token budget with immediate backfill from the waiting queue.  Reports
+tokens/s, slot utilization and the binary-cache memory win.
+
+Frontend (vlm/audio) archs serve via the static equal-length path.
 
 Run:  PYTHONPATH=src python examples/serve_engine.py \
           [--arch smollm-135m|mixtral-8x22b|hymba-1.5b|xlstm-350m]
@@ -15,7 +20,7 @@ import numpy as np
 
 from repro.configs import base
 from repro.models.lm import build_model
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import Request, ServeConfig, ServeEngine
 
 
 def main():
@@ -23,40 +28,61 @@ def main():
     p.add_argument("--arch", default="smollm-135m",
                    choices=[a for a in base.ARCH_IDS
                             if not base.get_config(a).skip_decode])
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--prompt-len", type=int, default=12)
-    p.add_argument("--new-tokens", type=int, default=24)
+    p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--min-prompt", type=int, default=4)
+    p.add_argument("--max-prompt", type=int, default=16)
+    p.add_argument("--new-tokens", type=int, default=16)
     args = p.parse_args()
 
     cfg = base.get_smoke_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     dparams = model.convert(params)
+    max_len = args.max_prompt + args.new_tokens + cfg.frontend_tokens + 8
     eng = ServeEngine(model, dparams, ServeConfig(
-        max_len=args.prompt_len + args.new_tokens + cfg.frontend_tokens + 8))
+        max_len=max_len, num_slots=args.slots))
 
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).astype(np.int32)
-    kw = {}
     if cfg.frontend_tokens:
-        kw["frontend_embeds"] = rng.standard_normal(
-            (args.batch, cfg.frontend_tokens, model.frontend_dim),
+        # frontend archs: static equal-length batch (continuous batching is
+        # token-decoder-only)
+        prompts = rng.integers(0, cfg.vocab_size,
+                               (args.slots, args.max_prompt)).astype(np.int32)
+        fe = rng.standard_normal(
+            (args.slots, cfg.frontend_tokens, model.frontend_dim),
             dtype=np.float32)
-
-    ticks = []
-    t0 = time.perf_counter()
-    out, report = eng.generate(
-        prompts, max_new_tokens=args.new_tokens,
-        stream_cb=lambda t, tok: ticks.append(time.perf_counter()), **kw)
-    total = time.perf_counter() - t0
-    print(f"[{cfg.name}] {args.batch} x {args.new_tokens} tokens "
-          f"in {total:.2f}s ({args.batch * args.new_tokens / total:.1f} "
-          f"tok/s; first token {ticks[0] - t0:.2f}s)")
+        t0 = time.perf_counter()
+        out, report = eng.generate(prompts, max_new_tokens=args.new_tokens,
+                                   frontend_embeds=fe)
+        total = time.perf_counter() - t0
+        n_tok = out.size
+        print(f"[{cfg.name}] static batch: {n_tok} tokens in {total:.2f}s "
+              f"({n_tok / total:.1f} tok/s)")
+    else:
+        reqs = [Request(rid=i,
+                        tokens=rng.integers(
+                            0, cfg.vocab_size,
+                            (int(rng.integers(args.min_prompt,
+                                              args.max_prompt + 1)),)
+                        ).astype(np.int32),
+                        max_new_tokens=args.new_tokens)
+                for i in range(args.requests)]
+        print(f"[{cfg.name}] {len(reqs)} requests, prompt lens "
+              f"{[len(r.tokens) for r in reqs]}, {args.slots} slots")
+        t0 = time.perf_counter()
+        results, report = eng.serve(reqs)
+        total = time.perf_counter() - t0
+        n_tok = sum(len(v) for v in results.values())
+        print(f"  {n_tok} tokens in {total:.2f}s ({n_tok / total:.1f} tok/s)"
+              f"; slot utilization "
+              f"{report['slot_utilization'] * 100:.0f}% over "
+              f"{report['decode_steps']:.0f} pooled decode steps, "
+              f"{report['prefill_batches']:.0f} admission waves")
+        for i in range(min(2, len(reqs))):
+            print(f"  req {i}: {results[i][:10].tolist()}")
     print(f"binary KV cache: {report['total_bytes']:.0f} B total, "
           f"{report['compression_vs_bf16']:.1f}x smaller than bf16 caches")
-    for i in range(min(2, args.batch)):
-        print(f"  seq {i}: {out[i, :12].tolist()}")
 
 
 if __name__ == "__main__":

@@ -210,7 +210,6 @@ def rbmm_int_split_k(a: Array, b: Array, k: int, splits: int, *,
         part = rbmm_int(a_s, b_s, k_s, scheme=scheme, dc=dc_s)
         total = part if total is None else total + part
     return total
-    del dc
 
 
 # ---------------------------------------------------------------------------

@@ -168,7 +168,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         t1 = time.time()
         compiled = lowered.compile()
         rec["compile_s"] = time.time() - t1
-        ca = compiled.cost_analysis() or {}
+        ca = hlo_cost.compiled_cost(compiled)
         # raw numbers count while-loop bodies once (XLA limitation) — keep
         # them for reference, but the roofline uses the loop-corrected
         # analysis from repro.launch.hlo_cost.

@@ -26,6 +26,20 @@ import json
 import re
 from typing import Dict, List, Optional, Tuple
 
+def compiled_cost(compiled) -> Dict[str, float]:
+    """Raw ``Compiled.cost_analysis()`` normalized to one flat dict.
+
+    JAX has returned a one-element list of per-device dicts, a bare dict,
+    and (transiently) None across versions; callers should never have to
+    care.  The numbers still count while-loop bodies once — use
+    :func:`analyze` on the HLO text for loop-corrected totals.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,

@@ -73,7 +73,10 @@ def rope(x: Array, positions: Array, theta: float) -> Array:
 class KVCache(NamedTuple):
     """Binary KV cache.  k_bits: (B, Hkv, W, dh/32) packed along d_h;
     vt_bits: (B, Hkv, dh, W/32) packed along the (ring) sequence dim;
-    length: scalar int32 — number of tokens written (ring wraps at W)."""
+    length: (B,) int32 — per-sequence tokens written (ring wraps at W).
+    Per-sequence lengths are what let a slot pool decode sequences at
+    different positions in one batched step (continuous batching); legacy
+    scalar lengths still broadcast fine everywhere they are read."""
     k_bits: Array
     vt_bits: Array
     length: Array
@@ -451,10 +454,18 @@ class SPSAttention:
                        memory: Optional[Array] = None,
                        positions: Optional[Array] = None,
                        window=None,
-                       cache_size: int = 0
+                       cache_size: int = 0,
+                       seq_lens: Optional[Array] = None
                        ) -> Tuple[Array, Optional[KVCache]]:
         """Full-sequence deploy forward.  Returns (out, cache) — cache built
-        when cache_size > 0 (ring size W = cache_size)."""
+        when cache_size > 0 (ring size W = cache_size).
+
+        ``seq_lens`` (B,) enables ragged right-padded batches: keys at
+        columns >= seq_lens[b] are masked out of every real query row, and
+        the cache keeps per-sequence ring contents/lengths.  Pad rows still
+        compute (they are positionwise garbage) but never leak into real
+        rows — attention is the only cross-position mixer and it is masked.
+        """
         b, s, _ = x.shape
         h, hkv, dh = self.num_heads, self.num_kv_heads, self.head_dim
         if positions is None:
@@ -499,6 +510,9 @@ class SPSAttention:
             th = self._theta_rows(theta, rows)[None]
             probs = (c >= th).astype(jnp.int32)
             m = self._mask(rows, cols, skv, window)[None, None]
+            if seq_lens is not None:
+                m = m & (cols[None, None, None, :] <
+                         seq_lens[:, None, None, None])
             probs = jnp.where(m, probs, 0)
             ctx = jnp.einsum("bhck,bhkd->bhcd", probs.astype(jnp.float32),
                              v_c, preferred_element_type=jnp.float32)
@@ -515,28 +529,35 @@ class SPSAttention:
         cache = None
         if cache_size:
             w = cache_size
+            lens = (jnp.full((b,), s, jnp.int32) if seq_lens is None
+                    else jnp.asarray(seq_lens, jnp.int32))
+            # Each sequence's last min(len, W) real tokens land at ring
+            # slots (t % W).  t spans W consecutive ints per row, so the
+            # slot row is a permutation of 0..W-1 — scatters never collide
+            # and invalid (t < 0, i.e. len < W) entries hit their own slot
+            # with zeros, which is the empty-ring encoding anyway.
+            t = lens[:, None] - w + jnp.arange(w)[None, :]      # (B, W)
+            valid = t >= 0
+            tc = jnp.clip(t, 0, max(s - 1, 0))
+            slots = jnp.mod(t, w).astype(jnp.int32)
+            kg = jnp.take_along_axis(k_bits, tc[:, None, :, None], axis=2)
+            kg = jnp.where(valid[:, None, :, None], kg, jnp.uint32(0))
             kc = jnp.zeros((b, hkv, w, packing.packed_len(dh)), jnp.uint32)
-            vc = jnp.zeros((b, hkv, dh, packing.packed_len(w)), jnp.uint32)
-            take = min(s, w)
-            # last `take` tokens land at ring slots (t % w)
-            t_idx = positions[0, s - take:] if positions.ndim == 2 else \
-                jnp.arange(s - take, s)
-            slots = (t_idx % w).astype(jnp.int32)
-            kc = kc.at[:, :, slots].set(k_bits[:, :, s - take:])
-            v_bits_tail = (s_v[:, :, s - take:] > 0).astype(jnp.uint32)
-            # scatter V bits into (dh, W/32) words
-            word = slots // packing.WORD
+            kc = kc.at[jnp.arange(b)[:, None], :, slots].set(
+                jnp.swapaxes(kg, 1, 2))
+            # V^T: bit (slot % 32) of word (slot // 32); one-hot word map
+            # sums are exact ORs because slots are unique per row
+            vg = jnp.take_along_axis(s_v, tc[:, None, :, None], axis=2)
+            v_bit = ((vg > 0) & valid[:, None, :, None]).astype(jnp.uint32)
             off = (slots % packing.WORD).astype(jnp.uint32)
-            vt = jnp.swapaxes(v_bits_tail, 2, 3)          # (B,Hkv,dh,take)
-            contrib = (vt << off[None, None, None, :]).astype(jnp.uint32)
-            # accumulate words by segment-sum over `word` (slots unique -> OR
-            # == sum, so a plain einsum over a one-hot word map is exact)
+            word = slots // packing.WORD
+            contrib = jnp.swapaxes(v_bit, 2, 3) << off[:, None, None, :]
             nwords = packing.packed_len(w)
-            onehot = (word[:, None] == jnp.arange(nwords)[None, :]
+            onehot = (word[:, :, None] == jnp.arange(nwords)[None, None, :]
                       ).astype(jnp.uint32)
-            vc = jnp.einsum("bhdt,tw->bhdw", contrib, onehot).astype(
+            vc = jnp.einsum("bhdt,btw->bhdw", contrib, onehot).astype(
                 jnp.uint32)
-            cache = KVCache(kc, vc, jnp.asarray(min(s, 2**31 - 1), jnp.int32))
+            cache = KVCache(kc, vc, jnp.minimum(lens, 2**31 - 1))
         return out, cache
 
     # -- deploy: cross-attention memory ---------------------------------------
@@ -548,7 +569,7 @@ class SPSAttention:
         _, k_bits, s_v = self._project_qkv_deploy(params, memory, positions)
         vt = packing.pack_bits(
             (jnp.swapaxes(s_v, 2, 3) > 0).astype(jnp.uint32))
-        return KVCache(k_bits, vt, jnp.asarray(s, jnp.int32))
+        return KVCache(k_bits, vt, jnp.full((b,), s, jnp.int32))
 
     def attend_memory(self, params: Params, x: Array, mem: KVCache) -> Array:
         """Cross-attention of x (B, S, d) over a static memory cache
@@ -567,7 +588,8 @@ class SPSAttention:
             th = theta[None, :, None, None]
         probs = (c >= th).astype(jnp.uint32)
         skv = mem.k_bits.shape[2]
-        valid = (jnp.arange(skv) < mem.length)[None, None, None, :]
+        mlen = jnp.reshape(jnp.asarray(mem.length), (-1, 1))  # (B|1, 1)
+        valid = (jnp.arange(skv)[None, :] < mlen)[:, None, None, :]
         probs = jnp.where(valid, probs, jnp.uint32(0))
         probs_p = packing.pack_bits(probs)
         vc_h = self._repeat_kv(mem.vt_bits)
@@ -587,33 +609,38 @@ class SPSAttention:
                       jnp.uint32),
             jnp.zeros((batch, hkv, dh, packing.packed_len(max_len)),
                       jnp.uint32),
-            jnp.zeros((), jnp.int32),
+            jnp.zeros((batch,), jnp.int32),
         )
 
     def deploy_decode(self, params: Params, x: Array, cache: KVCache, *,
                       window=None) -> Tuple[Array, KVCache]:
         """x: (B, 1, d) one new token; cache ring size W.
-        Fully binary score+context path (Eq. 7 xnor then and_dc)."""
+        Fully binary score+context path (Eq. 7 xnor then and_dc).
+
+        Every sequence in the batch advances from its OWN ``cache.length``
+        — ring slot, RoPE position, validity mask and SPS row threshold are
+        all per-sequence, so a slot pool can decode requests admitted at
+        different times in one step."""
         b, _, _ = x.shape
         h, hkv, dh = self.num_heads, self.num_kv_heads, self.head_dim
         w = cache.k_bits.shape[2]
-        pos = cache.length                      # tokens so far; this is token pos
-        positions = jnp.full((b, 1), pos, jnp.int32)
+        # per-sequence token position (legacy scalar lengths broadcast)
+        pos = jnp.broadcast_to(jnp.asarray(cache.length, jnp.int32), (b,))
+        positions = pos[:, None]
         q_bits, k_bits_new, s_v_new = self._project_qkv_deploy(
             params, x, positions)               # (B,H,1,dhp), (B,Hkv,1,dhp)
 
-        slot = (pos % w).astype(jnp.int32)
-        kc = lax.dynamic_update_slice_in_dim(
-            cache.k_bits, k_bits_new, slot, axis=2)
+        barange = jnp.arange(b)
+        slot = (pos % w).astype(jnp.int32)                    # (B,)
+        kc = cache.k_bits.at[barange, :, slot].set(k_bits_new[:, :, 0])
         # V^T ring update: set bit (slot % 32) of word (slot // 32)
         word_i = slot // packing.WORD
         off = (slot % packing.WORD).astype(jnp.uint32)
         v_bit = (s_v_new[:, :, 0] > 0).astype(jnp.uint32)     # (B,Hkv,dh)
-        old = lax.dynamic_slice_in_dim(cache.vt_bits, word_i, 1, axis=3)
-        mask_bit = jnp.uint32(1) << off
-        new = (old[..., 0] & ~mask_bit) | (v_bit << off)
-        vc = lax.dynamic_update_slice_in_dim(
-            cache.vt_bits, new[..., None], word_i, axis=3)
+        old = cache.vt_bits[barange, :, :, word_i]            # (B,Hkv,dh)
+        mask_bit = (jnp.uint32(1) << off)[:, None, None]
+        new = (old & ~mask_bit) | (v_bit << off[:, None, None])
+        vc = cache.vt_bits.at[barange, :, :, word_i].set(new)
 
         # scores over the whole ring
         if self.grouped_decode and self.groups > 1:
@@ -628,12 +655,12 @@ class SPSAttention:
                               impl="popcount")                # (B,H,1,W)
         theta = self._theta_int(params)
         if self.sps_granularity == "row":
-            row = jnp.clip(pos, 0, ROW_TABLE - 1)
-            th = theta[:, row][None, :, None, None]
+            row = jnp.clip(pos, 0, ROW_TABLE - 1)             # (B,)
+            th = theta[:, row].T[:, :, None, None]            # (B,H,1,1)
         else:
             th = theta[None, :, None, None]
         probs = (c >= th).astype(jnp.uint32)
-        valid = (jnp.arange(w) <= pos)[None, None, None, :]
+        valid = (jnp.arange(w)[None, :] <= pos[:, None])[:, None, None, :]
         probs = jnp.where(valid, probs, jnp.uint32(0))
         # pack probs along W -> and_dc against V^T (fully binary M3).
         # `window` is enforced structurally: the ring size W == window for

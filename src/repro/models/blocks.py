@@ -192,7 +192,8 @@ class Block:
 
     def deploy_prefill(self, params: Params, x: Array, *, positions=None,
                        window=None, memory: Optional[Array] = None,
-                       cache_size: int = 0
+                       cache_size: int = 0,
+                       seq_lens: Optional[Array] = None
                        ) -> Tuple[Array, Dict[str, Any]]:
         cfg = self.cfg
         parts = self._parts()
@@ -202,10 +203,16 @@ class Block:
         h = constrain(h, "batch", None, None)
         if window is None and self.window:
             window = self.window
+        if seq_lens is not None and self.kind != "attn":
+            # recurrent state (mamba/xLSTM) scanned over pad tokens would
+            # drift; the serve engine falls back to per-request prefill
+            raise ValueError(
+                f"ragged prefill (seq_lens) only supports attention "
+                f"blocks, not kind={self.kind!r}")
         if self.kind in ("attn", "hybrid", "dec"):
             a_out, kv = parts["attn"].deploy_prefill(
                 params["attn"], h, positions=positions, window=window,
-                cache_size=cache_size)
+                cache_size=cache_size, seq_lens=seq_lens)
             if kv is not None:
                 cache["attn"] = kv
             if self.kind == "hybrid":

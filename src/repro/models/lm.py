@@ -307,19 +307,37 @@ class LMModel:
 
     def prefill_with_cache(self, dparams: Params, tokens: Array, *,
                            max_len: int,
-                           frontend_embeds: Optional[Array] = None
+                           frontend_embeds: Optional[Array] = None,
+                           seq_lens: Optional[Array] = None
                            ) -> Tuple[Array, List[Dict[str, Any]]]:
-        """Python-loop prefill that returns per-layer decode caches."""
+        """Python-loop prefill that returns per-layer decode caches.
+
+        ``seq_lens`` (B,) admits a ragged right-padded batch: attention
+        masks keys past each sequence's true length, caches carry
+        per-sequence ring contents/lengths, and the returned logits are
+        read at each sequence's LAST REAL token (position seq_lens[b]-1),
+        not at the padded end."""
         x = self._embed_tokens(dparams, tokens, frontend_embeds)
+        sl = None
+        if seq_lens is not None:
+            sl = jnp.asarray(seq_lens, jnp.int32)
+            if self.cfg.frontend_tokens:
+                sl = sl + self.cfg.frontend_tokens
         caches: List[Dict[str, Any]] = []
         for i, (kind, w) in enumerate(self.plan):
             bp = (jax.tree.map(lambda t: t[i], dparams["blocks"])
                   if self.uniform else dparams["blocks"][i])
             blk = self._block(kind, w)
             cache_size = min(w or max_len, max_len)
-            x, cache = blk.deploy_prefill(bp, x, cache_size=cache_size)
+            x, cache = blk.deploy_prefill(bp, x, cache_size=cache_size,
+                                          seq_lens=sl)
             caches.append(cache)
-        return self._logits(dparams, x[:, -1:]), caches
+        if sl is None:
+            last = x[:, -1:]
+        else:
+            idx = jnp.clip(sl - 1, 0, x.shape[1] - 1)
+            last = x[jnp.arange(x.shape[0]), idx][:, None]
+        return self._logits(dparams, last), caches
 
     def init_caches(self, batch: int, max_len: int) -> List[Dict[str, Any]]:
         return [self._block(kind, w).init_cache(batch, max_len)

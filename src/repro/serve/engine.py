@@ -1,15 +1,32 @@
-"""Batched serving engine: prefill + jit'd decode loop on binary caches.
+"""Continuous-batching serve engine on a pooled binary KV cache.
 
-Static batching: a batch of equal-length prompts prefills once, then decode
-steps run under one jit with donated caches (the binary KV rings update in
-place).  The engine reports the binary-cache memory win (the paper's edge
-story, transferred to decode state).  Continuous batching / paged caches are
-orthogonal to the binarization and intentionally out of scope.
+Two scheduling modes over the same jit'd decode step (donated caches, the
+packed uint32 K/V^T rings update in place):
+
+  static      ``generate(prompts_2d)`` — one equal-length batch prefills
+              once, then decode steps run lockstep to a fixed horizon.
+  continuous  ``generate([variable-length prompts])`` / ``serve(requests)``
+              — a FIFO scheduler admits requests into a fixed pool of
+              cache slots.  Admission waves prefill together (ragged
+              right-padded with per-sequence length masks for pure
+              attention stacks; per-request for recurrent-state families),
+              are scattered into free slots, and join the SINGLE pooled
+              decode step already serving earlier requests — per-slot ring
+              positions live in the cache itself (KVCache.length is
+              per-sequence).  Slots retire on EOS or token budget and are
+              backfilled from the waiting queue on the next step.
+
+The binary cache is what makes deep pools cheap: each slot's decode state
+is 16-32x smaller than a bf16 KV cache (the paper's edge bandwidth story,
+transferred to serving), so slot count — i.e. serving concurrency — scales
+by the same factor at fixed memory.  ``cache_report`` surfaces both the
+memory win and slot occupancy/utilization.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,11 +39,62 @@ Params = Any
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_len: int = 2048
+    max_len: int = 2048              # decode ring size (>= prompt + new tokens
+    #                                  for full-attention stacks; windowed
+    #                                  stacks ring at their window)
     sampler: str = "greedy"          # greedy | temperature | top_k
     temperature: float = 1.0
     top_k: int = 40
     seed: int = 0
+    num_slots: int = 4               # continuous-batching pool size
+    eos_id: Optional[int] = None     # default retirement token
+
+
+@dataclasses.dataclass
+class Request:
+    """One decode request for the continuous engine."""
+    rid: int
+    tokens: np.ndarray               # (S,) int32 prompt
+    max_new_tokens: int
+    eos_id: Optional[int] = None     # falls back to ServeConfig.eos_id
+
+
+class Scheduler:
+    """FIFO admission queue.  Deliberately minimal — priority/fairness
+    policies slot in here without touching the engine loop."""
+
+    def __init__(self, requests: Sequence[Request] = ()):
+        self._queue = collections.deque(requests)
+
+    def add(self, request: Request) -> None:
+        self._queue.append(request)
+
+    def pop(self) -> Request:
+        return self._queue.popleft()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def __bool__(self) -> bool:
+        return bool(self._queue)
+
+
+class _SlotState:
+    """Python-side generation state for one occupied slot."""
+
+    __slots__ = ("request", "generated", "eos_id")
+
+    def __init__(self, request: Request, eos_id: Optional[int]):
+        self.request = request
+        self.generated: List[int] = []
+        self.eos_id = request.eos_id if request.eos_id is not None else eos_id
+
+    def push(self, token: int) -> bool:
+        """Record a token; True when the request should retire."""
+        self.generated.append(token)
+        if self.eos_id is not None and token == self.eos_id:
+            return True
+        return len(self.generated) >= self.request.max_new_tokens
 
 
 class ServeEngine:
@@ -56,24 +124,52 @@ class ServeEngine:
 
     # -- public API ---------------------------------------------------------------
 
-    def generate(self, prompts: np.ndarray, *, max_new_tokens: int,
+    def generate(self, prompts, *, max_new_tokens: int,
                  frontend_embeds: Optional[np.ndarray] = None,
-                 stream_cb: Optional[Callable[[int, np.ndarray], None]] = None
-                 ) -> Tuple[np.ndarray, Dict[str, float]]:
-        """prompts: (B, S) equal-length token batch.  Returns
-        (tokens (B, max_new_tokens), stats)."""
+                 stream_cb: Optional[Callable] = None):
+        """Generate from a batch of prompts.
+
+        prompts as a (B, S) ndarray -> static batching: returns
+        (tokens (B, max_new_tokens), stats).
+
+        prompts as a list of variable-length 1-D token arrays ->
+        continuous batching over the slot pool: returns
+        (list of per-prompt token arrays, stats).  ``stream_cb`` is called
+        as cb(step, tokens) in static mode and cb(rid, index, token) in
+        continuous mode."""
+        ndim = getattr(prompts, "ndim", None)
+        if ndim == 2:                             # np or jax (B, S) batch
+            return self._generate_static(np.asarray(prompts),
+                                         max_new_tokens,
+                                         frontend_embeds, stream_cb)
+        if ndim is not None and ndim != 1:
+            raise ValueError(f"prompts array must be (B, S), got "
+                             f"{ndim}-D; a single prompt is [prompt] or "
+                             f"prompt[None, :]")
+        if ndim == 1:
+            raise ValueError("single 1-D prompt: pass prompt[None, :] for "
+                             "static batching or [prompt] for continuous")
+        if frontend_embeds is not None:
+            raise ValueError("frontend models serve via the static path "
+                             "(pass an equal-length (B, S) batch)")
+        requests = [Request(rid=i, tokens=np.asarray(p, np.int32),
+                            max_new_tokens=max_new_tokens)
+                    for i, p in enumerate(prompts)]
+        results, report = self.serve(requests, stream_cb=stream_cb)
+        return [results[r.rid] for r in requests], report
+
+    # -- static batching ----------------------------------------------------
+
+    def _generate_static(self, prompts: np.ndarray, max_new_tokens: int,
+                         frontend_embeds, stream_cb
+                         ) -> Tuple[np.ndarray, Dict[str, float]]:
         b, s = prompts.shape
         kw: Dict[str, Any] = {}
         if frontend_embeds is not None:
             kw["frontend_embeds"] = jnp.asarray(frontend_embeds)
-        if self.model.cfg.family == "audio":
-            logits, caches = self.model.prefill_with_cache(
-                self.dparams, jnp.asarray(prompts),
-                max_len=self.cfg.max_len, **kw)
-        else:
-            logits, caches = self.model.prefill_with_cache(
-                self.dparams, jnp.asarray(prompts),
-                max_len=self.cfg.max_len, **kw)
+        logits, caches = self.model.prefill_with_cache(
+            self.dparams, jnp.asarray(prompts),
+            max_len=self.cfg.max_len, **kw)
         if self._decode_jit is None:
             self._build_decode()
         key = jax.random.PRNGKey(self.cfg.seed)
@@ -90,3 +186,138 @@ class ServeEngine:
         report = kvcache.cache_report(caches, seq_len=s + max_new_tokens,
                                       batch=b)
         return np.concatenate(out, axis=1), report
+
+    # -- continuous batching ------------------------------------------------
+
+    @property
+    def _ragged_ok(self) -> bool:
+        """Ragged (masked right-padded) prefill needs a pure attention
+        stack; recurrent state would scan over pad tokens."""
+        plan = getattr(self.model, "plan", None)
+        return plan is not None and {k for k, _ in plan} == {"attn"}
+
+    def serve(self, requests: Sequence[Request], *,
+              stream_cb: Optional[Callable] = None
+              ) -> Tuple[Dict[int, np.ndarray], Dict[str, float]]:
+        """Run the continuous-batching loop to completion.
+
+        Returns ({rid: generated tokens}, stats).  The loop alternates
+        admission (prefill new requests into free slots) with ONE pooled
+        decode step for every occupied slot; retirement frees slots
+        mid-flight and the next iteration backfills them from the queue."""
+        if getattr(self.model.cfg, "frontend_tokens", 0) or \
+                not hasattr(self.model, "init_caches"):
+            raise ValueError("continuous batching serves decoder-only "
+                             "token models")
+        # full-attention layers ring at max_len: a request that outgrows it
+        # would silently wrap and overwrite its own oldest K/V (windowed
+        # layers wrap by design — their ring IS the window)
+        plan = getattr(self.model, "plan", [])
+        full_attn = any(k in ("attn", "hybrid") and not w for k, w in plan)
+        for r in requests:
+            if len(r.tokens) == 0:
+                raise ValueError(f"request {r.rid}: empty prompt "
+                                 "(prefill needs at least one token)")
+            if r.max_new_tokens <= 0:
+                raise ValueError(f"request {r.rid}: max_new_tokens must "
+                                 "be positive")
+            if full_attn and len(r.tokens) + r.max_new_tokens > \
+                    self.cfg.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt ({len(r.tokens)}) + budget "
+                    f"({r.max_new_tokens}) exceeds the cache ring "
+                    f"(max_len={self.cfg.max_len}); raise ServeConfig."
+                    f"max_len")
+        scheduler = Scheduler(requests)
+        pool = kvcache.SlotPool(max(1, min(self.cfg.num_slots,
+                                           len(requests) or 1)))
+        caches = self.model.init_caches(pool.num_slots, self.cfg.max_len)
+        token_buf = np.zeros((pool.num_slots, 1), np.int32)
+        states: Dict[int, _SlotState] = {}
+        results: Dict[int, np.ndarray] = {}
+        if self._decode_jit is None:
+            self._build_decode()
+        key = jax.random.PRNGKey(self.cfg.seed)
+        prefill_batches = 0
+
+        def retire(slot: int) -> None:
+            st = states.pop(slot)
+            pool.release(slot)
+            results[st.request.rid] = np.asarray(st.generated, np.int32)
+
+        while scheduler or pool.active_count:
+            # -- admission: fill free slots from the queue ------------------
+            admitted: List[Tuple[int, Request]] = []
+            while scheduler and pool.free_count:
+                req = scheduler.pop()
+                admitted.append((pool.alloc(req.rid), req))
+            if admitted:
+                prefill_batches += 1
+                caches, first, key = self._admit(
+                    caches, [r for _, r in admitted],
+                    [s for s, _ in admitted], key)
+                for (slot, req), tok in zip(admitted, first):
+                    st = _SlotState(req, self.cfg.eos_id)
+                    states[slot] = st
+                    token_buf[slot, 0] = tok
+                    if stream_cb:
+                        stream_cb(req.rid, 0, tok)
+                    if st.push(tok):
+                        retire(slot)
+            if not pool.active_count:
+                continue
+            # -- one pooled decode step over every slot ---------------------
+            token, caches, key = self._decode_jit(
+                self.dparams, jnp.asarray(token_buf), caches, key)
+            toks = np.asarray(token)
+            pool.tick()
+            token_buf = toks.copy()
+            for slot in pool.active_slots:
+                st = states[slot]
+                tok = int(toks[slot, 0])
+                if stream_cb:
+                    stream_cb(st.request.rid, len(st.generated), tok)
+                if st.push(tok):
+                    retire(slot)
+
+        report = kvcache.cache_report(
+            caches, seq_len=self.cfg.max_len, batch=pool.num_slots,
+            slot_lengths=kvcache.slot_lengths(caches),
+            active=[s in states for s in range(pool.num_slots)],
+            busy_slot_steps=pool.busy_slot_steps,
+            decode_steps=pool.decode_steps)
+        report["prefill_batches"] = float(prefill_batches)
+        report["requests"] = float(len(requests))
+        return results, report
+
+    def _admit(self, caches, reqs: List[Request], slots: List[int], key):
+        """Prefill an admission wave and scatter it into the pool.
+
+        Equal-length waves batch directly; mixed-length waves use ragged
+        right-padded prefill (attention stacks) or fall back to
+        per-request prefill (recurrent-state families).  Returns
+        (caches, first sampled token per request, key)."""
+        lens = [len(r.tokens) for r in reqs]
+        smax = max(lens)
+        batch = np.zeros((len(reqs), smax), np.int32)
+        for i, r in enumerate(reqs):
+            batch[i, :lens[i]] = r.tokens
+        if len(set(lens)) == 1:
+            logits, seq_caches = self.model.prefill_with_cache(
+                self.dparams, jnp.asarray(batch), max_len=self.cfg.max_len)
+        elif self._ragged_ok:
+            logits, seq_caches = self.model.prefill_with_cache(
+                self.dparams, jnp.asarray(batch), max_len=self.cfg.max_len,
+                seq_lens=np.asarray(lens, np.int32))
+        else:
+            parts = [self.model.prefill_with_cache(
+                self.dparams, jnp.asarray(r.tokens[None]),
+                max_len=self.cfg.max_len) for r in reqs]
+            logits = jnp.concatenate([lg for lg, _ in parts], axis=0)
+            seq_caches = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0),
+                *[c for _, c in parts])
+        caches = kvcache.insert_slots(caches, seq_caches, slots)
+        key, sub = jax.random.split(key)
+        first = np.asarray(self._sample(logits, sub))[:, 0]
+        return caches, [int(t) for t in first], key

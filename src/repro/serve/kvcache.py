@@ -1,35 +1,36 @@
-"""Binary KV-cache bookkeeping for the serving engine.
+"""Pooled binary KV-cache management for the serving engine.
 
-The caches themselves live in the model layers (repro.models.attention
-KVCache rings, SSM states); this module sizes, counts and reports them —
-the deploy-memory story is the paper's headline number, so the engine
-surfaces it.
+The cache tensors live in the model layers (repro.models.attention KVCache
+rings, SSM states); every leaf is batch-leading, so a *slot pool* is just
+those same pytrees with batch == num_slots plus bookkeeping.  This module
+provides the slot-level operations the continuous-batching engine needs —
+allocate / free / reset, scatter freshly-prefilled per-request caches into
+pool slots — and the sizing/occupancy reports that surface the paper's
+deploy-memory story (packed uint32 K/V^T rings are 16-32x smaller than
+bf16 caches, so one edge device holds a much deeper slot pool).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+Caches = List[Dict[str, Any]]
 
-def cache_bytes(caches: List[Dict[str, Any]]) -> int:
+
+# ---------------------------------------------------------------------------
+# Sizing / reports
+# ---------------------------------------------------------------------------
+
+
+def cache_bytes(caches: Caches) -> int:
     return sum(int(np.prod(x.shape)) * x.dtype.itemsize
                for x in jax.tree.leaves(caches))
 
 
-def cache_report(caches: List[Dict[str, Any]], *, seq_len: int,
-                 batch: int) -> Dict[str, float]:
-    total = cache_bytes(caches)
-    per_tok = total / max(seq_len * batch, 1)
-    bf16 = bf16_equivalent_bytes(caches)
-    return {"total_bytes": float(total),
-            "bytes_per_token": float(per_tok),
-            "bf16_equivalent_bytes": float(bf16),
-            "compression_vs_bf16": float(bf16) / max(total, 1)}
-
-
-def bf16_equivalent_bytes(caches: List[Dict[str, Any]]) -> int:
+def bf16_equivalent_bytes(caches: Caches) -> int:
     """What the same cache would cost with bf16 K/V (the paper's 16-32x
     bandwidth argument, applied to decode state)."""
     total = 0
@@ -40,3 +41,135 @@ def bf16_equivalent_bytes(caches: List[Dict[str, Any]]) -> int:
         else:
             total += int(np.prod(x.shape)) * 2
     return total
+
+
+def cache_report(caches: Caches, *, seq_len: int, batch: int,
+                 slot_lengths: Optional[Sequence[int]] = None,
+                 active: Optional[Sequence[bool]] = None,
+                 busy_slot_steps: int = 0, decode_steps: int = 0
+                 ) -> Dict[str, float]:
+    """Memory + (optionally) per-slot occupancy/utilization stats.
+
+    ``slot_lengths``/``active`` describe the pool at report time;
+    ``busy_slot_steps``/``decode_steps`` aggregate over the whole run
+    (utilization = busy slot-steps / (decode steps * pool size))."""
+    total = cache_bytes(caches)
+    per_tok = total / max(seq_len * batch, 1)
+    bf16 = bf16_equivalent_bytes(caches)
+    report = {"total_bytes": float(total),
+              "bytes_per_token": float(per_tok),
+              "bf16_equivalent_bytes": float(bf16),
+              "compression_vs_bf16": float(bf16) / max(total, 1)}
+    if slot_lengths is not None:
+        lens = np.asarray(slot_lengths, np.int64)
+        act = (np.asarray(active, bool) if active is not None
+               else np.ones(len(lens), bool))
+        report["slots_total"] = float(len(lens))
+        report["slots_active"] = float(act.sum())
+        report["occupancy"] = float(act.mean()) if len(lens) else 0.0
+        report["mean_slot_len"] = (float(lens[act].mean())
+                                   if act.any() else 0.0)
+        report["max_slot_len"] = float(lens[act].max()) if act.any() else 0.0
+        report["decode_steps"] = float(decode_steps)
+        report["slot_utilization"] = (
+            busy_slot_steps / max(decode_steps * len(slot_lengths), 1))
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Slot-level cache surgery (all jit-friendly scatters on pooled pytrees)
+# ---------------------------------------------------------------------------
+
+
+def insert_slots(pool: Caches, seq_caches: Caches,
+                 slots: Sequence[int]) -> Caches:
+    """Scatter per-request caches (leading batch n) into pool ``slots``.
+
+    Every leaf is batch-leading by construction (KVCache rings, SSM
+    states, per-sequence lengths), so one tree-wide ``.at[slots].set``
+    writes the entire decode state of each admitted request into its
+    slot."""
+    idx = jnp.asarray(np.asarray(slots, np.int32))
+    return jax.tree.map(lambda p, s: p.at[idx].set(s.astype(p.dtype)),
+                        pool, seq_caches)
+
+
+def reset_slots(pool: Caches, slots: Sequence[int]) -> Caches:
+    """Zero the given slots (ring contents and per-slot lengths)."""
+    idx = jnp.asarray(np.asarray(slots, np.int32))
+    return jax.tree.map(
+        lambda p: p.at[idx].set(jnp.zeros((), p.dtype)), pool)
+
+
+def slot_lengths(caches: Caches) -> np.ndarray:
+    """Per-slot token counts, read from the first attention KVCache found
+    (all layers agree — decode advances them in lockstep)."""
+    for layer in caches:
+        if isinstance(layer, dict) and "attn" in layer:
+            return np.asarray(layer["attn"].length)
+    # SSM-only stacks carry no position; report zeros of pool size
+    leaves = jax.tree.leaves(caches)
+    b = leaves[0].shape[0] if leaves else 0
+    return np.zeros((b,), np.int32)
+
+
+class SlotPool:
+    """Free-list bookkeeping over a pooled cache batch.
+
+    The jax-side cache pytrees are owned by the engine (they flow through
+    the jit'd decode step with donation); this object tracks which batch
+    rows are live, which request occupies each, and utilization counters
+    for the serving report."""
+
+    def __init__(self, num_slots: int):
+        if num_slots <= 0:
+            raise ValueError("num_slots must be positive")
+        self.num_slots = num_slots
+        self._free: List[int] = list(range(num_slots))[::-1]  # pop() -> 0,1,..
+        self._owner: Dict[int, Any] = {}
+        self.busy_slot_steps = 0
+        self.decode_steps = 0
+
+    # -- alloc / free -------------------------------------------------------
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_count(self) -> int:
+        return len(self._owner)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return sorted(self._owner)
+
+    def owner(self, slot: int):
+        return self._owner.get(slot)
+
+    def alloc(self, rid) -> int:
+        """Claim a free slot for request ``rid``; raises when full."""
+        if not self._free:
+            raise RuntimeError("slot pool exhausted")
+        slot = self._free.pop()
+        self._owner[slot] = rid
+        return slot
+
+    def release(self, slot: int):
+        """Retire the request in ``slot``; the slot is immediately
+        reusable (returns the owning rid)."""
+        rid = self._owner.pop(slot)
+        self._free.append(slot)
+        return rid
+
+    # -- stats --------------------------------------------------------------
+
+    def tick(self) -> None:
+        """Record one pooled decode step for utilization accounting."""
+        self.decode_steps += 1
+        self.busy_slot_steps += self.active_count
+
+    @property
+    def utilization(self) -> float:
+        return self.busy_slot_steps / max(
+            self.decode_steps * self.num_slots, 1)

@@ -1,0 +1,80 @@
+"""`hypothesis` with a deterministic fallback.
+
+The property tests declare hypothesis as a test dependency (pyproject
+``[project.optional-dependencies] test``), but the suite must collect and
+run in environments where it cannot be installed.  When the real library is
+present we re-export it untouched; otherwise a tiny deterministic shim
+provides the subset the suite uses:
+
+  strategies.integers / floats / booleans / sampled_from
+  @settings(max_examples=..., deadline=...)       (deadline ignored)
+  @given(*strategies)                              (right-aligned binding,
+                                                    like hypothesis)
+
+The shim draws ``max_examples`` pseudo-random examples from a RNG seeded by
+the test's qualified name, so failures reproduce run-to-run.  No shrinking —
+the first failing example is reported as-is.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            n = len(strats)
+            drawn = [p.name for p in params[len(params) - n:]]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n_ex = getattr(wrapper, "_compat_max_examples",
+                               getattr(fn, "_compat_max_examples", 20))
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n_ex):
+                    ex = {name: s._draw(rng)
+                          for name, s in zip(drawn, strats)}
+                    fn(*args, **{**kwargs, **ex})
+
+            # hide the drawn parameters from pytest's fixture resolution
+            wrapper.__signature__ = sig.replace(
+                parameters=params[:len(params) - n])
+            return wrapper
+        return deco

@@ -77,7 +77,7 @@ def test_real_scan_correction():
         jax.ShapeDtypeStruct((5, m, m), jnp.float32)).compile()
     res = hlo_cost.analyze(c.as_text())
     assert res["flops"] == pytest.approx(5 * 2 * m ** 3, rel=0.01)
-    raw = c.cost_analysis().get("flops", 0.0)
+    raw = hlo_cost.compiled_cost(c).get("flops", 0.0)
     assert raw < res["flops"]  # the raw number undercounts
 
 

@@ -3,7 +3,7 @@ swept over shapes, schemes and block sizes per the deliverable contract."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import packing
 from repro.kernels.pack import ops as pack_ops, ref as pack_ref

@@ -4,7 +4,7 @@ Eq. 10 quantization fusion; Eq. 11 blocked FFN."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import packing, rbmm
 

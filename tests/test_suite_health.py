@@ -1,0 +1,26 @@
+"""Suite-health guard: every test module must IMPORT cleanly.
+
+Collection errors (missing optional deps, stale API imports) normally
+abort the whole pytest run with an opaque wall of tracebacks; this module
+imports each ``tests/test_*.py`` file as a named parametrized case so a
+broken module fails loudly as exactly one red test while the rest of the
+suite keeps running."""
+import importlib.util
+import pathlib
+import sys
+
+import pytest
+
+_HERE = pathlib.Path(__file__).resolve().parent
+_MODULES = sorted(p for p in _HERE.glob("test_*.py")
+                  if p.name != pathlib.Path(__file__).name)
+
+
+@pytest.mark.parametrize("path", _MODULES, ids=lambda p: p.stem)
+def test_module_imports(path):
+    if str(_HERE) not in sys.path:
+        sys.path.insert(0, str(_HERE))
+    spec = importlib.util.spec_from_file_location(
+        f"_suite_health_{path.stem}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
