@@ -1,16 +1,23 @@
-"""Static vs continuous scheduling throughput on the pooled binary cache.
+"""Static vs continuous vs paged-continuous scheduling on the binary cache.
 
-Replays the same mixed-length request trace through both schedulers:
+Replays the same mixed short/long request trace through three schedulers:
 
   static      requests grouped into pool-sized waves; every wave pads to
               its longest prompt and decodes in lockstep until the LAST
               member finishes (the classic static-batch bubble).
-  continuous  slot-pool engine: retirement frees a slot immediately and
-              the queue backfills it, so short requests never hold the
-              batch hostage.
+  continuous  slot-pool engine on contiguous rings: retirement frees a
+              slot immediately and the queue backfills it, but every slot
+              still reserves a full max_len ring.
+  paged       slot-pool engine on the page arena: slots own only the
+              pages their tokens occupy, the arena is sized to a fraction
+              of the contiguous footprint (--pages-frac), and exhaustion
+              preempts the lowest-priority slot instead of deadlocking.
 
-Reports tokens/s and slot utilization for each.  CPU-friendly smoke
-configs; pass --arch / sizes to scale up.
+Reports tokens/s, slot utilization, peak cache bytes and page-arena
+occupancy — the memory story behind the paper's packed uint32 K/V^T
+caches, extended from "16-32x smaller than bf16" to "and only the pages
+you actually use".  CPU-friendly smoke configs; pass --arch / sizes to
+scale up.
 
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py
 """
@@ -27,13 +34,23 @@ from repro.models.lm import build_model
 from repro.serve.engine import Request, ServeConfig, ServeEngine
 
 
-def make_trace(rng, n, vocab, lo, hi, new_lo, new_hi):
-    """Mixed-length request trace: uniform prompt lens and token budgets."""
-    return [Request(rid=i,
-                    tokens=rng.integers(0, vocab, (int(rng.integers(
-                        lo, hi + 1)),)).astype(np.int32),
-                    max_new_tokens=int(rng.integers(new_lo, new_hi + 1)))
-            for i in range(n)]
+def make_trace(rng, n, vocab, lo, hi, new_lo, new_hi, long_frac=0.25):
+    """Mixed short/long request trace: most requests draw uniform short
+    prompts/budgets; a ``long_frac`` tail uses the top of both ranges so
+    the static scheduler's bubble and the contiguous pool's stranded ring
+    memory both show."""
+    reqs = []
+    for i in range(n):
+        if rng.random() < long_frac:
+            plen, budget = hi, new_hi
+        else:
+            plen = int(rng.integers(lo, max(lo + 1, hi // 2 + 1)))
+            budget = int(rng.integers(new_lo, max(new_lo + 1,
+                                                  new_hi // 2 + 1)))
+        reqs.append(Request(
+            rid=i, tokens=rng.integers(0, vocab, (plen,)).astype(np.int32),
+            max_new_tokens=budget))
+    return reqs
 
 
 def run_static(eng: ServeEngine, reqs, num_slots: int):
@@ -44,6 +61,7 @@ def run_static(eng: ServeEngine, reqs, num_slots: int):
     t0 = time.perf_counter()
     produced = 0
     steps = 0
+    peak_bytes = 0.0
     for i in range(0, len(reqs), num_slots):
         wave = reqs[i:i + num_slots]
         smax = max(len(r.tokens) for r in wave)
@@ -53,13 +71,15 @@ def run_static(eng: ServeEngine, reqs, num_slots: int):
         # final position is real for every row (classic left-pad serving)
         for j, r in enumerate(wave):
             batch[j, -len(r.tokens):] = r.tokens
-        eng.generate(batch, max_new_tokens=horizon)
+        _, report = eng.generate(batch, max_new_tokens=horizon)
+        peak_bytes = max(peak_bytes, report["total_bytes"])
         steps += horizon
         produced += sum(r.max_new_tokens for r in wave)
     dt = time.perf_counter() - t0
     util = produced / max(steps * num_slots, 1)
     return {"tokens": produced, "seconds": dt,
-            "tokens_per_s": produced / dt, "slot_utilization": util}
+            "tokens_per_s": produced / dt, "slot_utilization": util,
+            "peak_cache_bytes": peak_bytes}
 
 
 def run_continuous(eng: ServeEngine, reqs):
@@ -67,24 +87,34 @@ def run_continuous(eng: ServeEngine, reqs):
     results, report = eng.serve(reqs)
     dt = time.perf_counter() - t0
     produced = sum(len(v) for v in results.values())
-    return {"tokens": produced, "seconds": dt,
-            "tokens_per_s": produced / dt,
-            "slot_utilization": report["slot_utilization"],
-            "decode_steps": report["decode_steps"],
-            "prefill_batches": report["prefill_batches"]}
+    out = {"tokens": produced, "seconds": dt,
+           "tokens_per_s": produced / dt,
+           "slot_utilization": report["slot_utilization"],
+           "decode_steps": report["decode_steps"],
+           "prefill_batches": report["prefill_batches"],
+           "peak_cache_bytes": report["total_bytes"]}
+    for k in ("pages_total", "page_utilization", "peak_page_utilization",
+              "page_fragmentation", "preemptions"):
+        if k in report:
+            out[k] = report[k]
+    return out
 
 
-def main():
+def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="smollm-135m")
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--min-prompt", type=int, default=4)
-    p.add_argument("--max-prompt", type=int, default=12)
+    p.add_argument("--max-prompt", type=int, default=24)
     p.add_argument("--min-new", type=int, default=4)
-    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--max-new", type=int, default=40)
+    p.add_argument("--page-size", type=int, default=32)
+    p.add_argument("--pages-frac", type=float, default=0.5,
+                   help="paged arena size as a fraction of the fully "
+                        "provisioned slots*max_blocks pool")
     p.add_argument("--seed", type=int, default=0)
-    args = p.parse_args()
+    args = p.parse_args(argv)
 
     cfg = base.get_smoke_config(args.arch)
     if cfg.skip_decode or cfg.frontend_tokens:
@@ -97,20 +127,41 @@ def main():
                       args.min_prompt, args.max_prompt,
                       args.min_new, args.max_new)
 
-    mk = lambda: ServeEngine(model, dparams, ServeConfig(
-        max_len=max_len, num_slots=args.slots))
+    max_blocks = -(-max_len // args.page_size)
+    num_pages = max(max_blocks,
+                    int(args.pages_frac * args.slots * max_blocks))
+    mk = lambda **kw: ServeEngine(model, dparams, ServeConfig(
+        max_len=max_len, num_slots=args.slots, **kw))
     print(f"[{cfg.name}] {args.requests} requests x {args.slots} slots; "
           f"prompts {args.min_prompt}-{args.max_prompt}, "
-          f"budgets {args.min_new}-{args.max_new}")
-    static = run_static(mk(), reqs, args.slots)
-    cont = run_continuous(mk(), reqs)
-    for name, r in (("static", static), ("continuous", cont)):
+          f"budgets {args.min_new}-{args.max_new} (mixed short/long); "
+          f"page_size={args.page_size}, arena {num_pages} pages "
+          f"(vs {args.slots * max_blocks} fully provisioned)")
+    runs = (("static", run_static(mk(), reqs, args.slots)),
+            ("continuous", run_continuous(mk(), reqs)),
+            ("paged", run_continuous(mk(paged=True,
+                                        page_size=args.page_size,
+                                        max_blocks=max_blocks,
+                                        num_pages=num_pages), reqs)))
+    for name, r in runs:
+        extra = ""
+        if "page_utilization" in r:
+            ppu = r["peak_page_utilization"] * 100
+            frag = r["page_fragmentation"] * 100
+            extra = (f"  peak-page-util {ppu:4.0f}%  frag {frag:4.1f}%  "
+                     f"preempt {r['preemptions']:.0f}")
         print(f"  {name:11s} {r['tokens']:5d} tok  {r['seconds']:6.2f}s  "
               f"{r['tokens_per_s']:8.1f} tok/s  "
-              f"util {r['slot_utilization'] * 100:5.1f}%")
+              f"util {r['slot_utilization'] * 100:5.1f}%  "
+              f"peak cache {r['peak_cache_bytes'] / 1024:8.1f} KiB{extra}")
+    static, cont, paged = (r for _, r in runs)
     speedup = cont["tokens_per_s"] / max(static["tokens_per_s"], 1e-9)
+    saving = 1 - paged["peak_cache_bytes"] / max(cont["peak_cache_bytes"], 1)
+    ratio = paged["peak_cache_bytes"] / max(cont["peak_cache_bytes"], 1)
     print(f"  continuous/static throughput: {speedup:.2f}x")
-    return {"static": static, "continuous": cont}
+    print(f"  paged/continuous peak cache bytes: {ratio:.2f}x "
+          f"({saving * 100:.0f}% saved)")
+    return {name: r for name, r in runs}
 
 
 if __name__ == "__main__":

@@ -7,10 +7,17 @@ V^T packed along the sequence, probs packed in flight), and retire on their
 token budget with immediate backfill from the waiting queue.  Reports
 tokens/s, slot utilization and the binary-cache memory win.
 
+With ``--paged`` the per-slot rings become a shared page arena + block
+tables: slots hold only the pages their tokens occupy, retirement returns
+them instantly, and an undersized arena (``--num-pages``) preempts the
+lowest-priority slot instead of deadlocking (docs/serving.md walks this
+exact run).
+
 Frontend (vlm/audio) archs serve via the static equal-length path.
 
 Run:  PYTHONPATH=src python examples/serve_engine.py \
-          [--arch smollm-135m|mixtral-8x22b|hymba-1.5b|xlstm-350m]
+          [--arch smollm-135m|mixtral-8x22b|hymba-1.5b|xlstm-350m] \
+          [--paged [--num-pages N]]
 """
 import argparse
 import time
@@ -33,6 +40,13 @@ def main():
     p.add_argument("--min-prompt", type=int, default=4)
     p.add_argument("--max-prompt", type=int, default=16)
     p.add_argument("--new-tokens", type=int, default=16)
+    p.add_argument("--paged", action="store_true",
+                   help="page-arena KV cache: slots own only the pages "
+                        "their tokens occupy; exhaustion preempts instead "
+                        "of deadlocking")
+    p.add_argument("--num-pages", type=int, default=0,
+                   help="arena pages for the full-attention group "
+                        "(0 = fully provisioned)")
     args = p.parse_args()
 
     cfg = base.get_smoke_config(args.arch)
@@ -40,8 +54,13 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     dparams = model.convert(params)
     max_len = args.max_prompt + args.new_tokens + cfg.frontend_tokens + 8
+    # frontend archs serve via the static path, which is contiguous-only
+    paged = args.paged and not cfg.frontend_tokens
+    if args.paged and not paged:
+        print(f"[{cfg.name}] frontend arch serves static: --paged ignored")
     eng = ServeEngine(model, dparams, ServeConfig(
-        max_len=max_len, num_slots=args.slots))
+        max_len=max_len, num_slots=args.slots, paged=paged,
+        num_pages=args.num_pages or None))
 
     rng = np.random.default_rng(0)
     if cfg.frontend_tokens:
@@ -79,6 +98,12 @@ def main():
               f"{report['slot_utilization'] * 100:.0f}% over "
               f"{report['decode_steps']:.0f} pooled decode steps, "
               f"{report['prefill_batches']:.0f} admission waves")
+        if "pages_total" in report:
+            print(f"  page arena: {report['pages_total']:.0f} pages, peak "
+                  f"{report['peak_page_utilization'] * 100:.0f}% used, "
+                  f"{report['page_fragmentation'] * 100:.1f}% internal "
+                  f"fragmentation, "
+                  f"{report['preemptions']:.0f} preemptions")
         for i in range(min(2, len(reqs))):
             print(f"  req {i}: {results[i][:10].tolist()}")
     print(f"binary KV cache: {report['total_bytes']:.0f} B total, "

@@ -1,4 +1,17 @@
-"""Jit'd wrapper for the pack kernel (interpret off-TPU)."""
+"""Public wrapper for the pack kernel — the data-packing conversion unit.
+
+Contract: ``pack_threshold(x (M, K) fp, theta broadcastable)`` returns
+``(M, ceil(K/32)) uint32`` with bit i of word w set iff
+``x[:, 32*w + i] >= theta`` — the binarize-then-pack step every deploy
+matmul input goes through, fused so the fp activations are read once and
+never materialized as a {0,1} tensor.  Pad bits (K % 32 != 0) are 0, per
+the packing convention in ``repro.core.packing``.
+
+Dispatch: real Mosaic lowering on TPU backends, interpret mode elsewhere
+(CPU CI).  Oracle: ``repro.kernels.pack.ref.pack_threshold`` (pure jnp,
+unblocked); ``tests/test_kernels.py`` holds kernel and oracle to
+bit-equality.
+"""
 from __future__ import annotations
 
 import jax

@@ -1,8 +1,20 @@
-"""Jit'd public wrappers for the RBMM Pallas kernel.
+"""Public wrappers for the RBMM (real-binary matmul) Pallas kernel.
+
+Contract (paper Eq. 7): given packed operands ``a (M, ceil(K/32))`` and
+``b (P, ceil(K/32))`` uint32, ``rbmm_int`` returns the (M, P) int32
+product of the underlying value matrices —
+``2*popcount(a XNOR b) - K`` for the ±1 "xnor" scheme, or
+``popcount(a AND b)`` corrected by the don't-care count ``dc`` for the
+{0,1} scheme.  ``rbmm_binary`` additionally thresholds the integer scores
+against ``theta`` (optionally causally masked) and returns packed binary
+probabilities plus their nnz — the SPS attention inner loop.
 
 Dispatch rule: real Mosaic lowering on TPU backends, interpret mode
-elsewhere (CPU CI).  The oracle lives in ``ref.py``; ``repro.core.rbmm``
-holds the shape-polymorphic jnp implementation used inside model graphs.
+elsewhere (CPU CI).  Oracle: ``repro.kernels.rbmm.ref`` (pure jnp,
+unblocked; ``ref.rbmm_int_dense`` is the ground-truth dense matmul);
+``tests/test_kernels.py`` holds kernel and oracle to bit-equality.
+``repro.core.rbmm`` holds the shape-polymorphic jnp implementation used
+inside model graphs.
 """
 from __future__ import annotations
 

@@ -1,4 +1,17 @@
-"""Jit'd wrapper for the MXU packed-weight kernel (interpret off-TPU)."""
+"""Public wrapper for the MXU packed-weight matmul kernel.
+
+Contract: ``rbmm_mxu(a_vals (M, K) fp/int values, w_packed
+(N, ceil(K/32)) uint32)`` returns the (M, N) f32 product of ``a_vals``
+against the ±1 weight matrix encoded in ``w_packed`` — weights are
+unpacked to ±1 *inside* the kernel tile so the contraction runs on the
+MXU while HBM only ever sees 1-bit weights (the bandwidth story for
+deploy-time BinaryDense layers whose activations stay real).
+
+Dispatch: real Mosaic lowering on TPU backends, interpret mode elsewhere
+(CPU CI).  Oracle: ``repro.kernels.rbmm_mxu.ref.rbmm_mxu`` (unpack then
+jnp dot); ``tests/test_kernels.py`` holds kernel and oracle to
+bit-equality.
+"""
 from __future__ import annotations
 
 import jax

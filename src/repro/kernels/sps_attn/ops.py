@@ -1,4 +1,21 @@
-"""Jit'd wrapper for the fused SPS attention kernel (interpret off-TPU)."""
+"""Public wrapper for the fused SPS binary attention kernel.
+
+Contract: ``sps_attention(q_bits, k_bits (H, L, ceil(d_h/32)) uint32,
+v (H, L, d_h) ±1 values, theta (H,) int32)`` returns the (H, L, d_h)
+int32 context of softmax-free SPS attention: causal XNOR-popcount scores,
+probability = score >= theta, context = probs @ v — with probs packed
+in-flight (``path="vpu"`` ANDs them against a packed V^T, the decode
+cache layout; ``path="mxu"`` keeps them dense for the matrix unit).  The
+L x L score matrix never materializes; this kernel is the fused Pallas
+mirror of the chunked ``lax.map`` attention in
+``repro.models.attention``.
+
+Dispatch: real Mosaic lowering on TPU backends, interpret mode elsewhere
+(CPU CI).  Oracle: ``repro.kernels.sps_attn.ref.sps_attention`` (unfused,
+unpacked, pure jnp; ``ref.v_transpose_packed`` builds the packed-V^T
+layout); ``tests/test_kernels.py`` holds kernel and oracle to
+bit-equality.
+"""
 from __future__ import annotations
 
 import jax

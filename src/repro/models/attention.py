@@ -82,6 +82,105 @@ class KVCache(NamedTuple):
     length: Array
 
 
+class PagedKVCache(NamedTuple):
+    """Paged binary KV cache: a page arena plus per-sequence block tables.
+
+    Instead of one contiguous W-token ring per sequence, tokens live in
+    fixed-size pages drawn from a shared arena.  Logical ring arithmetic is
+    unchanged — token position t occupies logical ring slot s = t % ring_len
+    — but slot s resolves through the block table to a physical page:
+    page ``block_table[b, s // page_size]``, offset ``s % page_size``.
+
+    Physical page 0 is a reserved *trash page*: unallocated block-table
+    entries are 0, so decode writes from free/retired pool slots (which
+    still run inside the jit'd pooled step) land there instead of
+    corrupting live pages.  Usable page ids are 1..num_pages.
+
+    Fields:
+      k_pages:     (P+1, Hkv, page_size, dh/32) uint32 — K bits packed
+                   along d_h, one row per page token.
+      vt_pages:    (P+1, Hkv, dh, page_size/32) uint32 — V^T bits packed
+                   along the page's token axis (page_size % 32 == 0, so
+                   packing words never straddle pages).
+      block_table: (B, num_blocks) int32 physical page ids (0 = unmapped).
+      length:      (B,) int32 tokens written per sequence.
+      ring_len:    () int32 logical ring length (window for SWA layers,
+                   num_blocks * page_size for full attention).
+    """
+    k_pages: Array
+    vt_pages: Array
+    block_table: Array
+    length: Array
+    ring_len: Array
+
+
+def _check_page_size(page_size: int) -> None:
+    """Single source of the page-size rule: a positive multiple of the
+    32-bit packing word, so V^T bit-packing never straddles pages."""
+    if page_size <= 0 or page_size % packing.WORD:
+        raise ValueError(
+            f"page_size must be a positive multiple of the packing "
+            f"word ({packing.WORD}), got {page_size}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PageSpec:
+    """Sizing knobs for paged binary KV caches (validated on
+    construction).
+
+    page_size:  tokens per page; must be a positive multiple of the 32-bit
+                packing word so V^T packing never straddles pages.
+    max_blocks: block-table width for full-attention layers.  The logical
+                capacity ``max_blocks * page_size`` replaces the contiguous
+                ``max_len`` ring cap — sequences may grow up to it.
+    num_pages:  usable arena pages for the full-capacity ring group
+                (windowed groups are always fully provisioned at
+                ``num_slots * ceil(window / page_size)``).  0 means fully
+                provisioned (num_slots * max_blocks).
+    """
+    page_size: int = 32
+    max_blocks: int = 1
+    num_pages: int = 0
+
+    def __post_init__(self):
+        self.validate()
+
+    @property
+    def capacity(self) -> int:
+        return self.max_blocks * self.page_size
+
+    def ring_for(self, window: int) -> int:
+        """Logical ring length for a layer: its window, or the full
+        capacity (window == 0 means full attention)."""
+        return min(window or self.capacity, self.capacity)
+
+    def blocks_for_ring(self, ring_len: int) -> int:
+        """Block-table width covering ``ring_len`` tokens."""
+        return -(-ring_len // self.page_size)
+
+    def arena_pages(self, ring_len: int, num_slots: int) -> int:
+        """Usable arena pages for a ring group: ``num_pages`` for the
+        contended full-capacity group, fully provisioned (bounded by the
+        window) otherwise.  The single source of truth for arena sizing —
+        the engine's host-side ``PageArena`` free lists and the per-layer
+        device allocations in ``Block.init_cache`` must agree, or page
+        ids could run past the device arrays."""
+        if self.num_pages and ring_len == self.capacity:
+            return self.num_pages
+        return num_slots * self.blocks_for_ring(ring_len)
+
+    def validate(self) -> None:
+        _check_page_size(self.page_size)
+        if self.max_blocks < 1:
+            raise ValueError(f"max_blocks must be >= 1, got "
+                             f"{self.max_blocks}")
+        if self.num_pages and self.num_pages < self.max_blocks:
+            raise ValueError(
+                f"num_pages ({self.num_pages}) < max_blocks "
+                f"({self.max_blocks}): one full-capacity sequence must fit "
+                f"the arena or admission deadlocks")
+
+
 # ---------------------------------------------------------------------------
 # Module
 # ---------------------------------------------------------------------------
@@ -612,17 +711,90 @@ class SPSAttention:
             jnp.zeros((batch,), jnp.int32),
         )
 
-    def deploy_decode(self, params: Params, x: Array, cache: KVCache, *,
-                      window=None) -> Tuple[Array, KVCache]:
+    def init_paged_cache(self, batch: int, *, ring_len: int, page_size: int,
+                         num_blocks: int, num_pages: int) -> PagedKVCache:
+        """Build an empty page arena + block tables for this layer.
+
+        ``num_pages`` usable pages are allocated plus the reserved trash
+        page 0.  ``ring_len`` is the logical ring length (the window for
+        SWA layers); ``num_blocks`` must cover it."""
+        _check_page_size(page_size)
+        if num_blocks * page_size < ring_len:
+            raise ValueError(f"{num_blocks} blocks of {page_size} cannot "
+                             f"cover ring_len={ring_len}")
+        hkv, dh = self.num_kv_heads, self.head_dim
+        return PagedKVCache(
+            k_pages=jnp.zeros((num_pages + 1, hkv, page_size,
+                               packing.packed_len(dh)), jnp.uint32),
+            vt_pages=jnp.zeros((num_pages + 1, hkv, dh,
+                                page_size // packing.WORD), jnp.uint32),
+            block_table=jnp.zeros((batch, num_blocks), jnp.int32),
+            length=jnp.zeros((batch,), jnp.int32),
+            ring_len=jnp.int32(ring_len),
+        )
+
+    def _attend_cache(self, params: Params, q_bits: Array, kc: Array,
+                      vc: Array, pos: Array, valid: Array) -> Array:
+        """Shared decode attend: one query token per sequence against a
+        packed K (B,Hkv,W,dhp) / V^T (B,Hkv,dh,W/32) view.  ``valid``
+        (B, W) masks live ring slots; ``pos`` (B,) selects the SPS row
+        threshold.  Fully binary score+context path (Eq. 7 xnor then
+        and_dc), identical math for the contiguous and paged layouts."""
+        b = q_bits.shape[0]
+        h, hkv, dh = self.num_heads, self.num_kv_heads, self.head_dim
+        w = kc.shape[2]
+        if self.grouped_decode and self.groups > 1:
+            g = self.groups
+            qg = q_bits[:, :, 0].reshape(b, hkv, g, -1)       # (B,Hkv,G,dhp)
+            x = ~(qg[:, :, :, None, :] ^ kc[:, :, None, :, :])
+            pc = lax.population_count(x).astype(jnp.int32).sum(-1)
+            c = (2 * pc - jnp.int32(dh)).reshape(b, h, 1, w)  # (B,H,1,W)
+        else:
+            kc_h = self._repeat_kv(kc)                        # (B,H,W,dhp)
+            c = rbmm.rbmm_int(q_bits, kc_h, dh, scheme="xnor",
+                              impl="popcount")                # (B,H,1,W)
+        theta = self._theta_int(params)
+        if self.sps_granularity == "row":
+            row = jnp.clip(pos, 0, ROW_TABLE - 1)             # (B,)
+            th = theta[:, row].T[:, :, None, None]            # (B,H,1,1)
+        else:
+            th = theta[None, :, None, None]
+        probs = (c >= th).astype(jnp.uint32)
+        probs = jnp.where(valid[:, None, None, :], probs, jnp.uint32(0))
+        # pack probs along W -> and_dc against V^T (fully binary M3)
+        probs_p = packing.pack_bits(probs)                    # (B,H,1,W/32)
+        nnz = probs.sum(-1, dtype=jnp.int32)                  # (B,H,1)
+        if self.grouped_decode and self.groups > 1:
+            g = self.groups
+            pg = probs_p[:, :, 0].reshape(b, hkv, g, -1)      # (B,Hkv,G,Wp)
+            x = pg[:, :, :, None, :] & vc[:, :, None, :, :]   # (B,Hkv,G,dh,Wp)
+            pc = lax.population_count(x).astype(jnp.int32).sum(-1)
+            pc = pc.reshape(b, h, 1, dh)
+        else:
+            vc_h = self._repeat_kv(vc)                        # (B,H,dh,W/32)
+            pc = lax.population_count(
+                probs_p[:, :, :, None, :] & vc_h[:, :, None, :, :]
+            ).astype(jnp.int32).sum(-1)                       # (B,H,1,dh)
+        ctx_int = 2 * pc - nnz[..., None]
+        return self._output_deploy(params, ctx_int)
+
+    def deploy_decode(self, params: Params, x: Array, cache, *,
+                      window=None) -> Tuple[Array, Any]:
         """x: (B, 1, d) one new token; cache ring size W.
         Fully binary score+context path (Eq. 7 xnor then and_dc).
 
         Every sequence in the batch advances from its OWN ``cache.length``
         — ring slot, RoPE position, validity mask and SPS row threshold are
         all per-sequence, so a slot pool can decode requests admitted at
-        different times in one step."""
+        different times in one step.  A ``PagedKVCache`` takes the paged
+        path (same math through a block-table gather); ``window`` is
+        enforced structurally in both layouts — the logical ring length
+        equals the window for SWA archs, so evicted tokens are simply
+        overwritten."""
+        del window
+        if isinstance(cache, PagedKVCache):
+            return self._deploy_decode_paged(params, x, cache)
         b, _, _ = x.shape
-        h, hkv, dh = self.num_heads, self.num_kv_heads, self.head_dim
         w = cache.k_bits.shape[2]
         # per-sequence token position (legacy scalar lengths broadcast)
         pos = jnp.broadcast_to(jnp.asarray(cache.length, jnp.int32), (b,))
@@ -642,43 +814,54 @@ class SPSAttention:
         new = (old & ~mask_bit) | (v_bit << off[:, None, None])
         vc = cache.vt_bits.at[barange, :, :, word_i].set(new)
 
-        # scores over the whole ring
-        if self.grouped_decode and self.groups > 1:
-            g = self.groups
-            qg = q_bits[:, :, 0].reshape(b, hkv, g, -1)       # (B,Hkv,G,dhp)
-            x = ~(qg[:, :, :, None, :] ^ kc[:, :, None, :, :])
-            pc = lax.population_count(x).astype(jnp.int32).sum(-1)
-            c = (2 * pc - jnp.int32(dh)).reshape(b, h, 1, w)  # (B,H,1,W)
-        else:
-            kc_h = self._repeat_kv(kc)                        # (B,H,W,dhp)
-            c = rbmm.rbmm_int(q_bits, kc_h, dh, scheme="xnor",
-                              impl="popcount")                # (B,H,1,W)
-        theta = self._theta_int(params)
-        if self.sps_granularity == "row":
-            row = jnp.clip(pos, 0, ROW_TABLE - 1)             # (B,)
-            th = theta[:, row].T[:, :, None, None]            # (B,H,1,1)
-        else:
-            th = theta[None, :, None, None]
-        probs = (c >= th).astype(jnp.uint32)
-        valid = (jnp.arange(w)[None, :] <= pos[:, None])[:, None, None, :]
-        probs = jnp.where(valid, probs, jnp.uint32(0))
-        # pack probs along W -> and_dc against V^T (fully binary M3).
-        # `window` is enforced structurally: the ring size W == window for
-        # SWA archs, so evicted tokens are simply overwritten.
-        del window
-        probs_p = packing.pack_bits(probs)                    # (B,H,1,W/32)
-        nnz = probs.sum(-1, dtype=jnp.int32)                  # (B,H,1)
-        if self.grouped_decode and self.groups > 1:
-            g = self.groups
-            pg = probs_p[:, :, 0].reshape(b, hkv, g, -1)      # (B,Hkv,G,Wp)
-            x = pg[:, :, :, None, :] & vc[:, :, None, :, :]   # (B,Hkv,G,dh,Wp)
-            pc = lax.population_count(x).astype(jnp.int32).sum(-1)
-            pc = pc.reshape(b, h, 1, dh)
-        else:
-            vc_h = self._repeat_kv(vc)                        # (B,H,dh,W/32)
-            pc = lax.population_count(
-                probs_p[:, :, :, None, :] & vc_h[:, :, None, :, :]
-            ).astype(jnp.int32).sum(-1)                       # (B,H,1,dh)
-        ctx_int = 2 * pc - nnz[..., None]
-        out = self._output_deploy(params, ctx_int)
+        valid = jnp.arange(w)[None, :] <= pos[:, None]        # (B,W)
+        out = self._attend_cache(params, q_bits, kc, vc, pos, valid)
         return out, KVCache(kc, vc, pos + 1)
+
+    def _deploy_decode_paged(self, params: Params, x: Array,
+                             cache: PagedKVCache
+                             ) -> Tuple[Array, PagedKVCache]:
+        """Paged decode step: write the new K/V^T bits through the block
+        table, then attend over the gathered page view.
+
+        The gathered view is laid out so logical ring slot s lands at
+        column s (page s // page_size owns columns [page*`s//page_size`,
+        ...)), making the math bit-identical to a contiguous ring of the
+        same logical length — the extra gathered columns past ``ring_len``
+        are masked off."""
+        b, _, _ = x.shape
+        hkv, dh = self.num_kv_heads, self.head_dim
+        page = cache.k_pages.shape[2]
+        nblk = cache.block_table.shape[1]
+        wg = nblk * page                                      # gathered width
+        ring = cache.ring_len                                 # () int32
+        pos = jnp.broadcast_to(jnp.asarray(cache.length, jnp.int32), (b,))
+        q_bits, k_bits_new, s_v_new = self._project_qkv_deploy(
+            params, x, pos[:, None])
+        # logical ring slot -> (physical page, in-page offset)
+        slot = (pos % ring).astype(jnp.int32)                 # (B,)
+        lp = slot // page
+        off = slot % page
+        barange = jnp.arange(b)
+        phys = cache.block_table[barange, lp]                 # (B,)
+        # free pool slots have block_table rows of 0 -> their garbage
+        # decode writes land on the reserved trash page, never on live data
+        kp = cache.k_pages.at[phys, :, off].set(k_bits_new[:, :, 0])
+        word_i = off // packing.WORD
+        bit = (off % packing.WORD).astype(jnp.uint32)
+        v_bit = (s_v_new[:, :, 0] > 0).astype(jnp.uint32)     # (B,Hkv,dh)
+        old = cache.vt_pages[phys, :, :, word_i]              # (B,Hkv,dh)
+        mask_bit = (jnp.uint32(1) << bit)[:, None, None]
+        new = (old & ~mask_bit) | (v_bit << bit[:, None, None])
+        vp = cache.vt_pages.at[phys, :, :, word_i].set(new)
+        # gather the slot's pages into a contiguous-ring view
+        bt = jnp.clip(cache.block_table, 0, kp.shape[0] - 1)  # (B,nblk)
+        kc = kp[bt]                                   # (B,nblk,Hkv,page,dhp)
+        kc = jnp.moveaxis(kc, 1, 2).reshape(b, hkv, wg, -1)
+        vc = vp[bt]                                   # (B,nblk,Hkv,dh,p32)
+        vc = jnp.moveaxis(vc, 1, 3)                   # (B,Hkv,dh,nblk,p32)
+        vc = vc.reshape(b, hkv, dh, wg // packing.WORD)
+        cols = jnp.arange(wg)[None, :]
+        valid = (cols <= pos[:, None]) & (cols < ring)        # (B,Wg)
+        out = self._attend_cache(params, q_bits, kc, vc, pos, valid)
+        return out, cache._replace(k_pages=kp, vt_pages=vp, length=pos + 1)

@@ -16,7 +16,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import nn
-from repro.models.attention import KVCache, SPSAttention
+from repro.models.attention import KVCache, PageSpec, SPSAttention
 from repro.models.ffn import BinaryFFN, BinaryMoE
 from repro.models.sharding import constrain
 from repro.models.ssm import (MambaBlock, MLSTMBlock, SLSTMBlock, MambaCache,
@@ -249,12 +249,29 @@ class Block:
         return constrain(x, "batch", None, None), cache
 
     def init_cache(self, batch: int, max_len: int,
-                   memory_len: int = 0) -> Dict[str, Any]:
+                   memory_len: int = 0,
+                   paged: Optional[PageSpec] = None) -> Dict[str, Any]:
+        """Empty decode cache for this block.
+
+        ``paged`` switches the attention part to a page arena + block
+        table (``PagedKVCache``): the logical ring length is the window
+        for SWA blocks and ``paged.capacity`` for full attention; SWA
+        arenas are fully provisioned (they are bounded by the window),
+        the full-capacity group uses ``paged.num_pages``.  Recurrent
+        state (mamba/xLSTM) is dense either way."""
         parts = self._parts()
         cache: Dict[str, Any] = {}
         if "attn" in parts:
-            w = self.window or max_len
-            cache["attn"] = parts["attn"].init_cache(batch, min(w, max_len))
+            if paged is not None:
+                ring = paged.ring_for(self.window)
+                cache["attn"] = parts["attn"].init_paged_cache(
+                    batch, ring_len=ring, page_size=paged.page_size,
+                    num_blocks=paged.blocks_for_ring(ring),
+                    num_pages=paged.arena_pages(ring, batch))
+            else:
+                w = self.window or max_len
+                cache["attn"] = parts["attn"].init_cache(batch,
+                                                         min(w, max_len))
         if self.kind == "dec":
             cache["cross"] = parts["cross"].init_cache(batch,
                                                        memory_len or 1)

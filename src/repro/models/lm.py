@@ -339,8 +339,15 @@ class LMModel:
             last = x[jnp.arange(x.shape[0]), idx][:, None]
         return self._logits(dparams, last), caches
 
-    def init_caches(self, batch: int, max_len: int) -> List[Dict[str, Any]]:
-        return [self._block(kind, w).init_cache(batch, max_len)
+    def init_caches(self, batch: int, max_len: int,
+                    paged=None) -> List[Dict[str, Any]]:
+        """Empty per-layer decode caches for a pool of ``batch`` slots.
+
+        ``paged`` (a ``repro.models.attention.PageSpec``) switches the
+        attention caches to the page-arena layout; ``max_len`` then only
+        sizes the contiguous fallback and is superseded by
+        ``paged.capacity`` for full-attention layers."""
+        return [self._block(kind, w).init_cache(batch, max_len, paged=paged)
                 for kind, w in self.plan]
 
     def decode_step(self, dparams: Params, token: Array,

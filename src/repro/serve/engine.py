@@ -1,14 +1,14 @@
 """Continuous-batching serve engine on a pooled binary KV cache.
 
 Two scheduling modes over the same jit'd decode step (donated caches, the
-packed uint32 K/V^T rings update in place):
+packed uint32 K/V^T caches update in place):
 
   static      ``generate(prompts_2d)`` — one equal-length batch prefills
               once, then decode steps run lockstep to a fixed horizon.
   continuous  ``generate([variable-length prompts])`` / ``serve(requests)``
-              — a FIFO scheduler admits requests into a fixed pool of
-              cache slots.  Admission waves prefill together (ragged
-              right-padded with per-sequence length masks for pure
+              — a priority/FIFO scheduler admits requests into a fixed
+              pool of cache slots.  Admission waves prefill together
+              (ragged right-padded with per-sequence length masks for pure
               attention stacks; per-request for recurrent-state families),
               are scattered into free slots, and join the SINGLE pooled
               decode step already serving earlier requests — per-slot ring
@@ -16,11 +16,20 @@ packed uint32 K/V^T rings update in place):
               per-sequence).  Slots retire on EOS or token budget and are
               backfilled from the waiting queue on the next step.
 
+With ``ServeConfig.paged`` the per-slot full-length rings are replaced by a
+shared page arena + per-slot block tables (repro.models.attention
+PagedKVCache): short requests return pages the moment they retire, long
+requests grow past the old ``max_len`` ring cap (up to ``max_blocks *
+page_size``), and when the arena is exhausted the engine *preempts* the
+lowest-priority slot back to the scheduler queue (recompute-on-resume)
+instead of deadlocking.  Decode stays ONE jit'd pooled step — block-table
+gathers resolve each slot's pages inside it.
+
 The binary cache is what makes deep pools cheap: each slot's decode state
 is 16-32x smaller than a bf16 KV cache (the paper's edge bandwidth story,
 transferred to serving), so slot count — i.e. serving concurrency — scales
-by the same factor at fixed memory.  ``cache_report`` surfaces both the
-memory win and slot occupancy/utilization.
+by the same factor at fixed memory.  ``cache_report`` surfaces the memory
+win, slot occupancy/utilization and page-arena occupancy/fragmentation.
 """
 from __future__ import annotations
 
@@ -32,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.attention import PagedKVCache, PageSpec
 from repro.serve import kvcache, sampler as sampler_lib
 
 Params = Any
@@ -39,38 +49,102 @@ Params = Any
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_len: int = 2048              # decode ring size (>= prompt + new tokens
-    #                                  for full-attention stacks; windowed
-    #                                  stacks ring at their window)
+    """Engine-level serving knobs.
+
+    Attributes:
+      max_len: contiguous decode ring size (>= prompt + new tokens for
+        full-attention stacks; windowed stacks ring at their window).  In
+        paged mode the full-attention cap is ``max_blocks * page_size``
+        instead.
+      sampler / temperature / top_k / seed: token sampling policy.
+      num_slots: continuous-batching pool size (concurrent sequences).
+      eos_id: default retirement token (per-request ``Request.eos_id``
+        overrides).
+      paged: replace per-slot rings with a page arena + block tables.
+      page_size: tokens per page; must be a positive multiple of 32 (the
+        uint32 packing word) so V^T bit-packing never straddles pages.
+      max_blocks: per-slot block-table width for full-attention layers;
+        defaults to ceil(max_len / page_size).  Capacity is
+        ``max_blocks * page_size`` and may exceed ``max_len``.
+      num_pages: usable pages in the shared full-capacity arena; defaults
+        to ``num_slots * max_blocks`` (fully provisioned — no preemption).
+        Sizing it below that is safe: exhaustion preempts, never deadlocks.
+    """
+    max_len: int = 2048
     sampler: str = "greedy"          # greedy | temperature | top_k
     temperature: float = 1.0
     top_k: int = 40
     seed: int = 0
-    num_slots: int = 4               # continuous-batching pool size
-    eos_id: Optional[int] = None     # default retirement token
+    num_slots: int = 4
+    eos_id: Optional[int] = None
+    paged: bool = False
+    page_size: int = 32
+    max_blocks: Optional[int] = None
+    num_pages: Optional[int] = None
+
+    def page_spec(self) -> PageSpec:
+        """Resolve the paged-cache sizing (PageSpec validates itself)."""
+        if self.max_blocks is not None:
+            blocks = self.max_blocks
+        else:
+            blocks = (-(-self.max_len // self.page_size)
+                      if self.page_size > 0 else 1)
+        return PageSpec(page_size=self.page_size, max_blocks=blocks,
+                        num_pages=self.num_pages or 0)
 
 
 @dataclasses.dataclass
 class Request:
-    """One decode request for the continuous engine."""
+    """One decode request for the continuous engine.
+
+    Attributes:
+      rid: caller-chosen id; results key on it.
+      tokens: (S,) int32 prompt (S >= 1).
+      max_new_tokens: total generation budget (> 0); survives preemption —
+        tokens generated before a preemption still count against it.
+      eos_id: retirement token; falls back to ``ServeConfig.eos_id``.
+      priority: higher runs first; the LOWEST-priority slot (ties: most
+        recently admitted) is preempted when the page arena is exhausted.
+    """
     rid: int
     tokens: np.ndarray               # (S,) int32 prompt
     max_new_tokens: int
     eos_id: Optional[int] = None     # falls back to ServeConfig.eos_id
+    priority: int = 0
 
 
 class Scheduler:
-    """FIFO admission queue.  Deliberately minimal — priority/fairness
-    policies slot in here without touching the engine loop."""
+    """Priority admission queue (FIFO within a priority class).
+
+    ``pop`` returns the highest-priority request, oldest first among ties
+    — with the default priority 0 everywhere this is plain FIFO.
+    ``requeue`` reinserts a preempted request at the head of its class so
+    it resumes before newer peers.  Fairness/wave-packing policies slot in
+    here without touching the engine loop."""
 
     def __init__(self, requests: Sequence[Request] = ()):
         self._queue = collections.deque(requests)
 
     def add(self, request: Request) -> None:
+        """Append a request at the queue tail."""
         self._queue.append(request)
 
+    def requeue(self, request: Request) -> None:
+        """Reinsert a preempted request at the queue head."""
+        self._queue.appendleft(request)
+
     def pop(self) -> Request:
-        return self._queue.popleft()
+        """Remove and return the next request (highest priority, FIFO
+        within the class)."""
+        best = 0
+        for i, r in enumerate(self._queue):
+            if r.priority > self._queue[best].priority:
+                best = i
+        if best == 0:
+            return self._queue.popleft()
+        req = self._queue[best]
+        del self._queue[best]
+        return req
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -82,12 +156,16 @@ class Scheduler:
 class _SlotState:
     """Python-side generation state for one occupied slot."""
 
-    __slots__ = ("request", "generated", "eos_id")
+    __slots__ = ("request", "generated", "eos_id", "cache_len", "admit_seq")
 
-    def __init__(self, request: Request, eos_id: Optional[int]):
+    def __init__(self, request: Request, eos_id: Optional[int],
+                 prompt_len: int, admit_seq: int,
+                 resumed: Sequence[int] = ()):
         self.request = request
-        self.generated: List[int] = []
+        self.generated: List[int] = list(resumed)
         self.eos_id = request.eos_id if request.eos_id is not None else eos_id
+        self.cache_len = prompt_len       # tokens written to the cache
+        self.admit_seq = admit_seq
 
     def push(self, token: int) -> bool:
         """Record a token; True when the request should retire."""
@@ -163,6 +241,13 @@ class ServeEngine:
     def _generate_static(self, prompts: np.ndarray, max_new_tokens: int,
                          frontend_embeds, stream_cb
                          ) -> Tuple[np.ndarray, Dict[str, float]]:
+        if self.cfg.paged:
+            # silently falling back to contiguous max_len rings would lose
+            # the paged capacity guarantee (and wrap past max_len)
+            raise ValueError(
+                "paged caches serve through the continuous path: pass a "
+                "list of prompts (or set ServeConfig.paged=False for the "
+                "static batch path)")
         b, s = prompts.shape
         kw: Dict[str, Any] = {}
         if frontend_embeds is not None:
@@ -196,6 +281,31 @@ class ServeEngine:
         plan = getattr(self.model, "plan", None)
         return plan is not None and {k for k, _ in plan} == {"attn"}
 
+    def _layer_rings(self, spec: PageSpec) -> List[Optional[int]]:
+        """Per-layer logical ring length for paged attention caches
+        (None for layers with no attention part)."""
+        return [spec.ring_for(w) if kind in ("attn", "hybrid") else None
+                for kind, w in getattr(self.model, "plan", [])]
+
+    def _sync_tables(self, caches, arenas, rings):
+        """Push dirty host-side block tables into the device caches.
+
+        Each layer gets its OWN device copy of its arena's table: the
+        caches pytree is donated into the jit'd decode step, and donation
+        rejects the same buffer appearing in two leaves."""
+        if not any(a.dirty for a in arenas.values()):
+            return caches
+        out = []
+        for c, ring in zip(caches, rings):
+            if ring is not None and isinstance(c.get("attn"), PagedKVCache):
+                c = dict(c)
+                c["attn"] = c["attn"]._replace(
+                    block_table=jnp.asarray(arenas[ring].block_tables))
+            out.append(c)
+        for a in arenas.values():
+            a.dirty = False
+        return out
+
     def serve(self, requests: Sequence[Request], *,
               stream_cb: Optional[Callable] = None
               ) -> Tuple[Dict[int, np.ndarray], Dict[str, float]]:
@@ -204,16 +314,21 @@ class ServeEngine:
         Returns ({rid: generated tokens}, stats).  The loop alternates
         admission (prefill new requests into free slots) with ONE pooled
         decode step for every occupied slot; retirement frees slots
-        mid-flight and the next iteration backfills them from the queue."""
+        mid-flight and the next iteration backfills them from the queue.
+        In paged mode each iteration also grows every active slot's block
+        tables to cover its next token, preempting the lowest-priority
+        slot back to the queue when the arena runs dry."""
         if getattr(self.model.cfg, "frontend_tokens", 0) or \
                 not hasattr(self.model, "init_caches"):
             raise ValueError("continuous batching serves decoder-only "
                              "token models")
-        # full-attention layers ring at max_len: a request that outgrows it
-        # would silently wrap and overwrite its own oldest K/V (windowed
-        # layers wrap by design — their ring IS the window)
         plan = getattr(self.model, "plan", [])
         full_attn = any(k in ("attn", "hybrid") and not w for k, w in plan)
+        spec = self.cfg.page_spec() if self.cfg.paged else None
+        # full-attention layers cap at the ring (contiguous: max_len) or
+        # the block-table capacity (paged): a request that outgrew it
+        # would silently wrap and overwrite its own oldest K/V (windowed
+        # layers wrap by design — their ring IS the window)
         for r in requests:
             if len(r.tokens) == 0:
                 raise ValueError(f"request {r.rid}: empty prompt "
@@ -222,7 +337,13 @@ class ServeEngine:
                 raise ValueError(f"request {r.rid}: max_new_tokens must "
                                  "be positive")
             if full_attn and len(r.tokens) + r.max_new_tokens > \
-                    self.cfg.max_len:
+                    (spec.capacity if spec else self.cfg.max_len):
+                if spec:
+                    raise ValueError(
+                        f"request {r.rid}: prompt ({len(r.tokens)}) + "
+                        f"budget ({r.max_new_tokens}) exceeds the paged "
+                        f"capacity (max_blocks * page_size = "
+                        f"{spec.capacity}); raise ServeConfig.max_blocks")
                 raise ValueError(
                     f"request {r.rid}: prompt ({len(r.tokens)}) + budget "
                     f"({r.max_new_tokens}) exceeds the cache ring "
@@ -231,41 +352,115 @@ class ServeEngine:
         scheduler = Scheduler(requests)
         pool = kvcache.SlotPool(max(1, min(self.cfg.num_slots,
                                            len(requests) or 1)))
-        caches = self.model.init_caches(pool.num_slots, self.cfg.max_len)
+        arenas: Dict[int, kvcache.PageArena] = {}
+        rings: List[Optional[int]] = []
+        if spec:
+            rings = self._layer_rings(spec)
+            for ring in rings:
+                if ring is None or ring in arenas:
+                    continue
+                arenas[ring] = kvcache.PageArena(
+                    spec.arena_pages(ring, pool.num_slots), spec.page_size,
+                    pool.num_slots, spec.blocks_for_ring(ring), ring)
+            caches = self.model.init_caches(pool.num_slots,
+                                            self.cfg.max_len, paged=spec)
+        else:
+            caches = self.model.init_caches(pool.num_slots, self.cfg.max_len)
         token_buf = np.zeros((pool.num_slots, 1), np.int32)
         states: Dict[int, _SlotState] = {}
         results: Dict[int, np.ndarray] = {}
+        resumed: Dict[int, List[int]] = {}   # rid -> tokens before preempt
         if self._decode_jit is None:
             self._build_decode()
         key = jax.random.PRNGKey(self.cfg.seed)
         prefill_batches = 0
+        preemptions = 0
+        admit_seq = 0
+        peak_pages = 0       # true simultaneous peak across all arenas
 
-        def retire(slot: int) -> None:
+        def release_slot(slot: int) -> _SlotState:
+            """Shared teardown: drop python state, free the pool slot and
+            every arena's pages.  Retirement and preemption differ only
+            in what happens to the request afterwards."""
             st = states.pop(slot)
             pool.release(slot)
+            for arena in arenas.values():
+                arena.release(slot)
+            return st
+
+        def retire(slot: int) -> None:
+            st = release_slot(slot)
             results[st.request.rid] = np.asarray(st.generated, np.int32)
+
+        def preempt(slot: int) -> None:
+            """Evict a slot back to the queue (recompute-on-resume): its
+            pages free immediately; the prompt + tokens-so-far re-prefill
+            on re-admission."""
+            st = release_slot(slot)
+            resumed[st.request.rid] = list(st.generated)
+            scheduler.requeue(st.request)
 
         while scheduler or pool.active_count:
             # -- admission: fill free slots from the queue ------------------
             admitted: List[Tuple[int, Request]] = []
             while scheduler and pool.free_count:
                 req = scheduler.pop()
-                admitted.append((pool.alloc(req.rid), req))
+                plen = len(req.tokens) + len(resumed.get(req.rid, ()))
+                slot = pool.alloc(req.rid)
+                # reserve prompt + first decode write (plen + 1): admitting
+                # on prompt pages alone could prefill a request only for
+                # its own first growth step to preempt it straight back
+                if arenas and not all(a.can_grow(slot, plen + 1)
+                                      for a in arenas.values()):
+                    pool.release(slot)
+                    scheduler.requeue(req)   # no pages yet; retry later
+                    break
+                for arena in arenas.values():
+                    arena.grow(slot, plen + 1)
+                admitted.append((slot, req))
             if admitted:
                 prefill_batches += 1
+                caches = self._sync_tables(caches, arenas, rings)
+                reqs = [r for _, r in admitted]
+                pre = [resumed.pop(r.rid, []) for r in reqs]
                 caches, first, key = self._admit(
-                    caches, [r for _, r in admitted],
-                    [s for s, _ in admitted], key)
-                for (slot, req), tok in zip(admitted, first):
-                    st = _SlotState(req, self.cfg.eos_id)
+                    caches, reqs, pre, [s for s, _ in admitted], key)
+                for (slot, req), tok, res in zip(admitted, first, pre):
+                    st = _SlotState(req, self.cfg.eos_id,
+                                    len(req.tokens) + len(res),
+                                    admit_seq, res)
+                    admit_seq += 1
                     states[slot] = st
                     token_buf[slot, 0] = tok
                     if stream_cb:
-                        stream_cb(req.rid, 0, tok)
+                        stream_cb(req.rid, len(res), tok)
                     if st.push(tok):
                         retire(slot)
             if not pool.active_count:
                 continue
+            # -- paged growth: cover the next token; preempt on exhaustion --
+            if arenas:
+                while True:
+                    ok = True
+                    for slot in pool.active_slots:
+                        need = states[slot].cache_len + 1
+                        if not all(a.grow(slot, need)
+                                   for a in arenas.values()):
+                            ok = False
+                            break
+                    if ok:
+                        break
+                    victim = min(states, key=lambda s: (
+                        states[s].request.priority, -states[s].admit_seq))
+                    preempt(victim)
+                    preemptions += 1
+                    if not pool.active_count:
+                        break
+                if not pool.active_count:
+                    continue
+                peak_pages = max(peak_pages, sum(
+                    a.used_pages for a in arenas.values()))
+                caches = self._sync_tables(caches, arenas, rings)
             # -- one pooled decode step over every slot ---------------------
             token, caches, key = self._decode_jit(
                 self.dparams, jnp.asarray(token_buf), caches, key)
@@ -274,6 +469,7 @@ class ServeEngine:
             token_buf = toks.copy()
             for slot in pool.active_slots:
                 st = states[slot]
+                st.cache_len += 1
                 tok = int(toks[slot, 0])
                 if stream_cb:
                     stream_cb(st.request.rid, len(st.generated), tok)
@@ -281,38 +477,59 @@ class ServeEngine:
                     retire(slot)
 
         report = kvcache.cache_report(
-            caches, seq_len=self.cfg.max_len, batch=pool.num_slots,
+            caches,
+            seq_len=spec.capacity if spec else self.cfg.max_len,
+            batch=pool.num_slots,
             slot_lengths=kvcache.slot_lengths(caches),
             active=[s in states for s in range(pool.num_slots)],
             busy_slot_steps=pool.busy_slot_steps,
-            decode_steps=pool.decode_steps)
+            decode_steps=pool.decode_steps,
+            arenas=list(arenas.values()) if arenas else None)
         report["prefill_batches"] = float(prefill_batches)
         report["requests"] = float(len(requests))
+        if spec:
+            report["preemptions"] = float(preemptions)
+            # cache_report sums per-arena peaks, which can land on
+            # different steps; replace with the per-step simultaneous
+            # peak the loop actually observed
+            report["peak_page_utilization"] = (
+                peak_pages / max(sum(a.num_pages
+                                     for a in arenas.values()), 1))
         return results, report
 
-    def _admit(self, caches, reqs: List[Request], slots: List[int], key):
+    def _admit(self, caches, reqs: List[Request],
+               resumed: List[List[int]], slots: List[int], key):
         """Prefill an admission wave and scatter it into the pool.
 
+        ``resumed`` carries tokens generated before a preemption; they are
+        appended to the prompt and recomputed (recompute-on-resume).
         Equal-length waves batch directly; mixed-length waves use ragged
         right-padded prefill (attention stacks) or fall back to
-        per-request prefill (recurrent-state families).  Returns
-        (caches, first sampled token per request, key)."""
-        lens = [len(r.tokens) for r in reqs]
+        per-request prefill (recurrent-state families).  In paged mode the
+        prefill ring is sized to the wave's longest prompt so rings never
+        wrap and ring slot s == token position s — the page scatter in
+        ``kvcache.insert_slots`` relies on that.  Returns (caches, first
+        sampled token per request, key)."""
+        toks = [np.concatenate([np.asarray(r.tokens, np.int32),
+                                np.asarray(res, np.int32)])
+                for r, res in zip(reqs, resumed)]
+        lens = [len(t) for t in toks]
         smax = max(lens)
+        prefill_len = max(smax, 1) if self.cfg.paged else self.cfg.max_len
         batch = np.zeros((len(reqs), smax), np.int32)
-        for i, r in enumerate(reqs):
-            batch[i, :lens[i]] = r.tokens
+        for i, t in enumerate(toks):
+            batch[i, :lens[i]] = t
         if len(set(lens)) == 1:
             logits, seq_caches = self.model.prefill_with_cache(
-                self.dparams, jnp.asarray(batch), max_len=self.cfg.max_len)
+                self.dparams, jnp.asarray(batch), max_len=prefill_len)
         elif self._ragged_ok:
             logits, seq_caches = self.model.prefill_with_cache(
-                self.dparams, jnp.asarray(batch), max_len=self.cfg.max_len,
+                self.dparams, jnp.asarray(batch), max_len=prefill_len,
                 seq_lens=np.asarray(lens, np.int32))
         else:
             parts = [self.model.prefill_with_cache(
-                self.dparams, jnp.asarray(r.tokens[None]),
-                max_len=self.cfg.max_len) for r in reqs]
+                self.dparams, jnp.asarray(t[None]),
+                max_len=prefill_len) for t in toks]
             logits = jnp.concatenate([lg for lg, _ in parts], axis=0)
             seq_caches = jax.tree.map(
                 lambda *xs: jnp.concatenate(xs, axis=0),

@@ -1,13 +1,16 @@
 """Pooled binary KV-cache management for the serving engine.
 
 The cache tensors live in the model layers (repro.models.attention KVCache
-rings, SSM states); every leaf is batch-leading, so a *slot pool* is just
-those same pytrees with batch == num_slots plus bookkeeping.  This module
-provides the slot-level operations the continuous-batching engine needs —
-allocate / free / reset, scatter freshly-prefilled per-request caches into
-pool slots — and the sizing/occupancy reports that surface the paper's
-deploy-memory story (packed uint32 K/V^T rings are 16-32x smaller than
-bf16 caches, so one edge device holds a much deeper slot pool).
+rings / PagedKVCache page arenas, SSM states); every contiguous leaf is
+batch-leading, so a *slot pool* is just those same pytrees with batch ==
+num_slots plus bookkeeping.  This module provides the slot-level operations
+the continuous-batching engine needs — allocate / free / reset, scatter
+freshly-prefilled per-request caches into pool slots, page-arena alloc /
+free / growth bookkeeping (``PageArena``) — and the sizing/occupancy
+reports that surface the paper's deploy-memory story (packed uint32 K/V^T
+caches are 16-32x smaller than bf16 caches, so one edge device holds a much
+deeper slot pool; paging then lets short requests return that memory early
+and long requests grow past any fixed ring).
 """
 from __future__ import annotations
 
@@ -17,7 +20,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import packing
+from repro.models.attention import KVCache, PagedKVCache
+
 Caches = List[Dict[str, Any]]
+
+_paged_leaf = lambda x: isinstance(x, PagedKVCache)
 
 
 # ---------------------------------------------------------------------------
@@ -26,6 +34,8 @@ Caches = List[Dict[str, Any]]
 
 
 def cache_bytes(caches: Caches) -> int:
+    """Total device bytes held by a cache pytree (pages, rings, block
+    tables, recurrent states — every array leaf counts)."""
     return sum(int(np.prod(x.shape)) * x.dtype.itemsize
                for x in jax.tree.leaves(caches))
 
@@ -46,13 +56,30 @@ def bf16_equivalent_bytes(caches: Caches) -> int:
 def cache_report(caches: Caches, *, seq_len: int, batch: int,
                  slot_lengths: Optional[Sequence[int]] = None,
                  active: Optional[Sequence[bool]] = None,
-                 busy_slot_steps: int = 0, decode_steps: int = 0
+                 busy_slot_steps: int = 0, decode_steps: int = 0,
+                 arenas: Optional[Sequence["PageArena"]] = None
                  ) -> Dict[str, float]:
     """Memory + (optionally) per-slot occupancy/utilization stats.
 
-    ``slot_lengths``/``active`` describe the pool at report time;
-    ``busy_slot_steps``/``decode_steps`` aggregate over the whole run
-    (utilization = busy slot-steps / (decode steps * pool size))."""
+    Args:
+      caches: the pool cache pytree (list of per-layer dicts).
+      seq_len / batch: nominal capacity used for the bytes-per-token rate.
+      slot_lengths / active: (num_slots,) pool state at report time.
+      busy_slot_steps / decode_steps: run-aggregate counters
+        (utilization = busy slot-steps / (decode steps * pool size)).
+      arenas: page arenas backing the pool (paged mode); adds
+        occupancy/fragmentation stats aggregated over every arena.
+
+    Returns a flat dict of floats:
+      total_bytes, bytes_per_token, bf16_equivalent_bytes,
+      compression_vs_bf16; with slot_lengths also slots_total,
+      slots_active, occupancy, mean_slot_len, max_slot_len, decode_steps,
+      slot_utilization; with arenas also pages_total, pages_used,
+      pages_free, page_utilization, peak_page_utilization and
+      page_fragmentation (share of allocated page tokens not backing a
+      live token — internal fragmentation of each sequence's last partial
+      page, sampled at peak arena occupancy).
+    """
     total = cache_bytes(caches)
     per_tok = total / max(seq_len * batch, 1)
     bf16 = bf16_equivalent_bytes(caches)
@@ -73,6 +100,24 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
         report["decode_steps"] = float(decode_steps)
         report["slot_utilization"] = (
             busy_slot_steps / max(decode_steps * len(slot_lengths), 1))
+    if arenas is not None:
+        arenas = list(arenas)
+        tot = sum(a.num_pages for a in arenas)
+        used = sum(a.used_pages for a in arenas)
+        peak = sum(a.peak_pages for a in arenas)
+        report["pages_total"] = float(tot)
+        report["pages_used"] = float(used)
+        report["pages_free"] = float(tot - used)
+        report["page_utilization"] = used / max(tot, 1)
+        report["peak_page_utilization"] = peak / max(tot, 1)
+        # internal fragmentation (allocated page tokens not backing a live
+        # token) sampled at each arena's peak occupancy — the end-of-run
+        # value is trivially 0 once everything retires.  A current-state
+        # figure is derivable from allocated_tokens/live_tokens if needed.
+        peak_alloc = sum(a.peak_pages * a.page_size for a in arenas)
+        report["page_fragmentation"] = (
+            sum(a.peak_frag * a.peak_pages * a.page_size for a in arenas)
+            / max(peak_alloc, 1))
     return report
 
 
@@ -81,29 +126,101 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
 # ---------------------------------------------------------------------------
 
 
+def _insert_paged(pg: PagedKVCache, ring: KVCache,
+                  idx: jax.Array) -> PagedKVCache:
+    """Scatter per-request contiguous rings into a paged pool's pages.
+
+    The ring must be wrap-free for logical positions (the engine prefills
+    with ring size >= the longest prompt in the wave), so ring slot s holds
+    token s and maps to logical page ``s // page_size``, offset
+    ``s % page_size`` — resolved to physical pages through the pool's
+    block-table rows at ``idx`` (which the engine synced beforehand).
+    Positions past a slot's allocated pages (or past ``ring_len``) route to
+    the trash page 0; their ring contents are zeros/garbage that no valid
+    mask ever reads.
+    """
+    n, hkv, w_r, _ = ring.k_bits.shape
+    page = pg.k_pages.shape[2]
+    nblk = pg.block_table.shape[1]
+    bt = pg.block_table[idx]                                  # (n, nblk)
+    s = jnp.arange(w_r)
+    lp, off = s // page, s % page
+    beyond = lp >= nblk
+    phys = jnp.take(bt, jnp.where(beyond, 0, lp), axis=1)     # (n, w_r)
+    phys = jnp.where(beyond[None, :], 0, phys)
+    off2 = jnp.broadcast_to(off[None, :], phys.shape)
+    kp = pg.k_pages.at[phys, :, off2].set(
+        jnp.swapaxes(ring.k_bits, 1, 2).astype(jnp.uint32))
+    # V^T words: ring word j covers slots 32j..32j+31; a 32-aligned run
+    # never straddles a page because page_size % 32 == 0, so whole words
+    # move -> page (32j // page), in-page word ((32j % page) // 32)
+    wp = ring.vt_bits.shape[-1]
+    j32 = jnp.arange(wp) * packing.WORD
+    lpw = j32 // page
+    wj = (j32 % page) // packing.WORD
+    beyond_w = lpw >= nblk
+    physw = jnp.take(bt, jnp.where(beyond_w, 0, lpw), axis=1)  # (n, wp)
+    physw = jnp.where(beyond_w[None, :], 0, physw)
+    wj2 = jnp.broadcast_to(wj[None, :], physw.shape)
+    vp = pg.vt_pages.at[physw, :, :, wj2].set(
+        jnp.moveaxis(ring.vt_bits, 3, 1).astype(jnp.uint32))
+    return pg._replace(k_pages=kp, vt_pages=vp,
+                       length=pg.length.at[idx].set(
+                           ring.length.astype(jnp.int32)))
+
+
 def insert_slots(pool: Caches, seq_caches: Caches,
                  slots: Sequence[int]) -> Caches:
     """Scatter per-request caches (leading batch n) into pool ``slots``.
 
-    Every leaf is batch-leading by construction (KVCache rings, SSM
-    states, per-sequence lengths), so one tree-wide ``.at[slots].set``
-    writes the entire decode state of each admitted request into its
-    slot."""
+    Args:
+      pool: pooled cache pytree (batch == num_slots leaves, or
+        ``PagedKVCache`` arenas).
+      seq_caches: per-request caches from prefill, leading batch n ==
+        len(slots).  Attention entries are contiguous ``KVCache`` rings in
+        both modes — prefill always builds rings; paged pools absorb them
+        through the block table.
+      slots: pool rows to write.
+
+    Every contiguous leaf is batch-leading by construction (KVCache rings,
+    SSM states, per-sequence lengths), so one tree-wide ``.at[slots].set``
+    writes the entire decode state of each admitted request into its slot;
+    paged attention leaves instead scatter the rings page-by-page
+    (``_insert_paged``).  Returns the updated pool pytree (same shapes).
+    """
     idx = jnp.asarray(np.asarray(slots, np.int32))
-    return jax.tree.map(lambda p, s: p.at[idx].set(s.astype(p.dtype)),
-                        pool, seq_caches)
+
+    def merge(p, s):
+        if isinstance(p, PagedKVCache):
+            return _insert_paged(p, s, idx)
+        return p.at[idx].set(s.astype(p.dtype))
+
+    return jax.tree.map(merge, pool, seq_caches, is_leaf=_paged_leaf)
 
 
 def reset_slots(pool: Caches, slots: Sequence[int]) -> Caches:
-    """Zero the given slots (ring contents and per-slot lengths)."""
+    """Zero the given slots' decode state.
+
+    Contiguous leaves (rings, lengths, SSM states) zero their batch rows;
+    paged leaves zero the block-table rows (unmapping the pages — physical
+    page contents are left stale, the next owner overwrites before any
+    valid mask can read them) and lengths.  Returns the updated pool."""
     idx = jnp.asarray(np.asarray(slots, np.int32))
-    return jax.tree.map(
-        lambda p: p.at[idx].set(jnp.zeros((), p.dtype)), pool)
+
+    def reset(p):
+        if isinstance(p, PagedKVCache):
+            return p._replace(
+                block_table=p.block_table.at[idx].set(0),
+                length=p.length.at[idx].set(0))
+        return p.at[idx].set(jnp.zeros((), p.dtype))
+
+    return jax.tree.map(reset, pool, is_leaf=_paged_leaf)
 
 
 def slot_lengths(caches: Caches) -> np.ndarray:
     """Per-slot token counts, read from the first attention KVCache found
-    (all layers agree — decode advances them in lockstep)."""
+    (all layers agree — decode advances them in lockstep).  Works for both
+    contiguous and paged attention caches (both carry ``.length``)."""
     for layer in caches:
         if isinstance(layer, dict) and "attn" in layer:
             return np.asarray(layer["attn"].length)
@@ -111,6 +228,109 @@ def slot_lengths(caches: Caches) -> np.ndarray:
     leaves = jax.tree.leaves(caches)
     b = leaves[0].shape[0] if leaves else 0
     return np.zeros((b,), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Page-arena bookkeeping (host side)
+# ---------------------------------------------------------------------------
+
+
+class PageArena:
+    """Free-list bookkeeping for one ring group's page arena.
+
+    Layers that share a logical ring length (e.g. every full-attention
+    layer, or every window-W layer) allocate in lockstep, so ONE arena's
+    block tables mirror into each of the group's per-layer
+    ``PagedKVCache.block_table`` arrays.  Physical page ids are 1..
+    ``num_pages``; id 0 is the trash page every layer reserves.
+
+    The jax-side page arrays are owned by the engine (they flow through the
+    jit'd decode step with donation); this object only tracks which pages
+    back which (slot, logical page) and when the device tables are stale
+    (``dirty``).
+    """
+
+    def __init__(self, num_pages: int, page_size: int, num_slots: int,
+                 num_blocks: int, ring_len: int):
+        if num_pages < num_blocks:
+            raise ValueError(
+                f"arena of {num_pages} pages cannot back one full "
+                f"sequence ({num_blocks} blocks) — admission would "
+                f"deadlock")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.num_blocks = num_blocks
+        self.ring_len = ring_len
+        self._free: List[int] = list(range(num_pages, 0, -1))  # pop() -> 1,2..
+        self.block_tables = np.zeros((num_slots, num_blocks), np.int32)
+        self._counts = np.zeros((num_slots,), np.int64)
+        self._lengths = np.zeros((num_slots,), np.int64)
+        self.peak_pages = 0
+        self.peak_frag = 0.0       # internal fragmentation at peak occupancy
+        self.dirty = True          # device tables not yet synced
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def allocated_tokens(self) -> int:
+        """Token capacity of every allocated page (page-granular)."""
+        return self.used_pages * self.page_size
+
+    @property
+    def live_tokens(self) -> int:
+        """Ring-capped live tokens actually backing allocated pages."""
+        return int(np.minimum(self._lengths, self.ring_len).sum())
+
+    def blocks_for(self, length: int) -> int:
+        """Logical pages needed to hold ``length`` tokens (ring-capped)."""
+        return -(-min(length, self.ring_len) // self.page_size)
+
+    def can_grow(self, slot: int, length: int) -> bool:
+        return (self.blocks_for(length) - int(self._counts[slot])
+                <= len(self._free))
+
+    # -- alloc / free ------------------------------------------------------
+
+    def grow(self, slot: int, length: int) -> bool:
+        """Ensure ``slot`` owns pages covering ``length`` tokens.
+
+        Returns False (allocating nothing) when the arena cannot satisfy
+        the growth — the engine then preempts a victim and retries."""
+        need = self.blocks_for(length)
+        have = int(self._counts[slot])
+        if need - have > len(self._free):
+            return False
+        for lp in range(have, need):
+            self.block_tables[slot, lp] = self._free.pop()
+        self._lengths[slot] = max(int(self._lengths[slot]), length)
+        if need > have:
+            self._counts[slot] = need
+            self.dirty = True
+            if self.used_pages >= self.peak_pages:
+                self.peak_pages = self.used_pages
+                self.peak_frag = 1 - (self.live_tokens /
+                                      max(self.allocated_tokens, 1))
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return every page owned by ``slot`` to the free list and unmap
+        its block-table row (retirement or preemption)."""
+        n = int(self._counts[slot])
+        for lp in range(n):
+            self._free.append(int(self.block_tables[slot, lp]))
+        if n:
+            self.block_tables[slot, :n] = 0
+            self.dirty = True
+        self._counts[slot] = 0
+        self._lengths[slot] = 0
 
 
 class SlotPool:

@@ -1,0 +1,262 @@
+"""Paged binary KV cache: the block-table decode path must be
+token-for-token identical to the contiguous rings across model families,
+sequences must grow past the old ``max_len`` ring cap, arena exhaustion
+must preempt (never deadlock), retired pages must be bit-cleanly reusable,
+and sizing errors must be loud."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.models.attention import PageSpec, PagedKVCache, SPSAttention
+from repro.models.lm import build_model
+from repro.serve import kvcache
+from repro.serve.engine import Request, Scheduler, ServeConfig, ServeEngine
+
+
+def _build(arch):
+    cfg = base.get_smoke_config(arch)
+    model = build_model(cfg)
+    dparams = model.convert(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, dparams
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    return _build("smollm-135m")
+
+
+def _solo_reference(model, dparams, prompt, n_new, max_len):
+    eng = ServeEngine(model, dparams, ServeConfig(max_len=max_len))
+    out, _ = eng.generate(np.asarray(prompt)[None, :], max_new_tokens=n_new)
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# Token-for-token equivalence against the contiguous path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mixtral-8x22b",
+                                  "gemma3-27b", "hymba-1.5b", "xlstm-350m"])
+def test_paged_matches_contiguous(arch):
+    """dense / MoE / sliding-window / hybrid / SSM all decode identically
+    through the page arena (the paged=False escape hatch is the oracle)."""
+    cfg, model, dparams = _build(arch)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (4, 7, 5)]
+    cont, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=64, num_slots=2)).generate(prompts, max_new_tokens=3)
+    paged, report = ServeEngine(model, dparams, ServeConfig(
+        max_len=64, num_slots=2, paged=True)).generate(
+            prompts, max_new_tokens=3)
+    for i, (a, b) in enumerate(zip(cont, paged)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    if {k for k, _ in model.plan} & {"attn", "hybrid"}:
+        assert report["pages_total"] > 0
+
+
+def test_growth_past_old_ring_cap(smollm):
+    """A paged sequence grows past max_len (the old hard cap) up to
+    max_blocks * page_size, matching a contiguous engine sized large."""
+    cfg, model, dparams = smollm
+    rng = np.random.default_rng(7)
+    p = rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+    ref = _solo_reference(model, dparams, p, 40, max_len=96)
+    eng = ServeEngine(model, dparams, ServeConfig(
+        max_len=32, num_slots=1, paged=True, page_size=32, max_blocks=3))
+    out, _ = eng.generate([p], max_new_tokens=40)
+    assert len(p) + 40 > 32                       # really beyond old cap
+    np.testing.assert_array_equal(ref, out[0])
+    # the contiguous path must still reject this request
+    with pytest.raises(ValueError, match="cache ring"):
+        ServeEngine(model, dparams, ServeConfig(
+            max_len=32, num_slots=1)).generate([p], max_new_tokens=40)
+
+
+def test_page_reuse_after_retirement_bit_identical(smollm):
+    """Pages freed by a retired request are handed to the next one without
+    any scrubbing; stale bits must never leak into the new decode."""
+    cfg, model, dparams = smollm
+    rng = np.random.default_rng(11)
+    pa = rng.integers(0, cfg.vocab_size, (9,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    eng = ServeEngine(model, dparams, ServeConfig(
+        max_len=64, num_slots=1, paged=True, page_size=32, max_blocks=2,
+        num_pages=2))                     # B can only reuse A's pages
+    results, report = eng.serve(
+        [Request(rid=0, tokens=pa, max_new_tokens=4),
+         Request(rid=1, tokens=pb, max_new_tokens=4)])
+    np.testing.assert_array_equal(
+        _solo_reference(model, dparams, pa, 4, 64), results[0])
+    np.testing.assert_array_equal(
+        _solo_reference(model, dparams, pb, 4, 64), results[1])
+    assert report["prefill_batches"] == 2.0       # B admitted after A
+
+
+# ---------------------------------------------------------------------------
+# Exhaustion / preemption
+# ---------------------------------------------------------------------------
+
+
+def test_arena_exhaustion_preempts_without_deadlock(smollm):
+    """An arena too small for every active slot evicts the lowest-priority
+    one back to the queue; every request still completes exactly."""
+    cfg, model, dparams = smollm
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab_size, (20,)).astype(np.int32)
+               for _ in range(2)]
+    refs = [_solo_reference(model, dparams, q, 30, 96) for q in prompts]
+    eng = ServeEngine(model, dparams, ServeConfig(
+        max_len=96, num_slots=2, paged=True, page_size=32, max_blocks=3,
+        num_pages=3))                     # both need 2 pages to finish
+    results, report = eng.serve(
+        [Request(rid=i, tokens=q, max_new_tokens=30)
+         for i, q in enumerate(prompts)])
+    assert report["preemptions"] >= 1.0
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(ref, results[i], err_msg=f"rid {i}")
+
+
+def test_preemption_victim_is_lowest_priority(smollm):
+    """With distinct priorities the high-priority request must keep its
+    slot; the low-priority one is evicted, resumed, and still exact."""
+    cfg, model, dparams = smollm
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab_size, (20,)).astype(np.int32)
+               for _ in range(2)]
+    refs = [_solo_reference(model, dparams, q, 30, 96) for q in prompts]
+    seen = []
+    eng = ServeEngine(model, dparams, ServeConfig(
+        max_len=96, num_slots=2, paged=True, page_size=32, max_blocks=3,
+        num_pages=3))
+    results, report = eng.serve(
+        [Request(rid=0, tokens=prompts[0], max_new_tokens=30, priority=1),
+         Request(rid=1, tokens=prompts[1], max_new_tokens=30, priority=0)],
+        stream_cb=lambda rid, i, tok: seen.append(rid))
+    assert report["preemptions"] >= 1.0
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(ref, results[i])
+    # rid 0 (high priority) streams without interruption: its 30 tokens
+    # arrive before rid 1's last token (rid 1 was parked mid-flight)
+    assert len([r for r in seen if r == 0]) == 30
+    last0 = max(i for i, r in enumerate(seen) if r == 0)
+    last1 = max(i for i, r in enumerate(seen) if r == 1)
+    assert last0 < last1
+
+
+def test_scheduler_priority_pop_order():
+    reqs = [Request(rid=i, tokens=np.ones((1,), np.int32),
+                    max_new_tokens=1, priority=p)
+            for i, p in enumerate([0, 2, 1, 2])]
+    sched = Scheduler(reqs)
+    order = [sched.pop().rid for _ in range(4)]
+    assert order == [1, 3, 2, 0]          # priority desc, FIFO within ties
+    sched.add(reqs[0])
+    sched.requeue(reqs[2])                # preempted -> head of line
+    assert sched.pop().rid == 2
+
+
+# ---------------------------------------------------------------------------
+# Sizing validation + arena bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_paged_rejects_static_batch_path(smollm):
+    """The static (B, S) path has no block tables; silently serving it
+    contiguous would void the paged capacity guarantee."""
+    cfg, model, dparams = smollm
+    eng = ServeEngine(model, dparams, ServeConfig(
+        max_len=32, paged=True, max_blocks=4))
+    with pytest.raises(ValueError, match="continuous path"):
+        eng.generate(np.ones((2, 4), np.int32), max_new_tokens=2)
+
+
+def test_page_size_packing_word_alignment_errors(smollm):
+    cfg, model, dparams = smollm
+    for bad in (48, 0, -32, 31):
+        with pytest.raises(ValueError, match="multiple"):
+            ServeEngine(model, dparams, ServeConfig(
+                max_len=64, paged=True, page_size=bad)).serve(
+                    [Request(rid=0, tokens=np.ones((2,), np.int32),
+                             max_new_tokens=1)])
+    with pytest.raises(ValueError, match="multiple"):
+        PageSpec(page_size=48, max_blocks=2).validate()
+    with pytest.raises(ValueError, match="deadlock"):
+        PageSpec(page_size=32, max_blocks=4, num_pages=2).validate()
+    attn = SPSAttention(d_model=64, num_heads=2, num_kv_heads=2,
+                        head_dim=32)
+    with pytest.raises(ValueError, match="multiple"):
+        attn.init_paged_cache(1, ring_len=32, page_size=16, num_blocks=2,
+                              num_pages=2)
+    with pytest.raises(ValueError, match="cover"):
+        attn.init_paged_cache(1, ring_len=96, page_size=32, num_blocks=2,
+                              num_pages=2)
+
+
+def test_page_arena_bookkeeping():
+    arena = kvcache.PageArena(num_pages=4, page_size=32, num_slots=2,
+                              num_blocks=3, ring_len=96)
+    assert arena.free_pages == 4 and arena.used_pages == 0
+    assert arena.blocks_for(0) == 0
+    assert arena.blocks_for(1) == 1
+    assert arena.blocks_for(33) == 2
+    assert arena.blocks_for(1000) == 3    # ring-capped
+    assert arena.grow(0, 40)              # 2 pages
+    assert arena.used_pages == 2 and arena.peak_pages == 2
+    assert (arena.block_tables[0, :2] > 0).all()
+    assert arena.grow(1, 60)              # 2 more -> arena exhausted
+    assert not arena.grow(0, 96)          # needs 1 more, 0 free
+    assert arena.can_grow(0, 64) and not arena.can_grow(0, 65)
+    # fragmentation: 4 pages (128 token slots) back 40 + 60 live tokens
+    assert arena.allocated_tokens == 128 and arena.live_tokens == 100
+    arena.release(0)
+    assert arena.free_pages == 2
+    assert (arena.block_tables[0] == 0).all()
+    assert arena.grow(0, 64)              # reuse freed pages
+    with pytest.raises(ValueError, match="deadlock"):
+        kvcache.PageArena(num_pages=2, page_size=32, num_slots=1,
+                          num_blocks=3, ring_len=96)
+
+
+def test_paged_reset_slots_unmaps_only_tables(smollm):
+    """reset_slots on a paged pool zeroes block tables and lengths but
+    never touches page payloads (stale pages are masked, not scrubbed)."""
+    cfg, model, dparams = smollm
+    spec = PageSpec(page_size=32, max_blocks=2, num_pages=4)
+    pool = model.init_caches(2, 64, paged=spec)
+    paged = [c["attn"] for c in pool
+             if isinstance(c.get("attn"), PagedKVCache)]
+    assert paged, "smollm layers should build paged attention caches"
+    marked = [c._replace(
+        k_pages=c.k_pages + jnp.uint32(1),
+        block_table=c.block_table.at[:, :].set(1),
+        length=c.length + 5) for c in paged]
+    pool = [{**layer, "attn": m} for layer, m in zip(pool, marked)]
+    out = kvcache.reset_slots(pool, [0])
+    for layer in out:
+        a = layer["attn"]
+        assert (np.asarray(a.block_table[0]) == 0).all()
+        assert (np.asarray(a.block_table[1]) == 1).all()
+        assert int(a.length[0]) == 0 and int(a.length[1]) == 5
+        assert (np.asarray(a.k_pages) == 1).all()   # payload untouched
+
+
+def test_paged_cache_report_keys(smollm):
+    cfg, model, dparams = smollm
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (4, 6)]
+    _, report = ServeEngine(model, dparams, ServeConfig(
+        max_len=64, num_slots=2, paged=True, page_size=32,
+        num_pages=3)).generate(prompts, max_new_tokens=2)
+    for k in ("pages_total", "pages_used", "pages_free", "page_utilization",
+              "peak_page_utilization", "page_fragmentation", "preemptions"):
+        assert k in report, k
+    assert report["pages_total"] >= 3.0
+    assert 0.0 < report["peak_page_utilization"] <= 1.0
+    assert 0.0 <= report["page_fragmentation"] <= 1.0
+    # everything retired -> all pages back on the free list
+    assert report["pages_used"] == 0.0
