@@ -47,6 +47,12 @@ def main():
     p.add_argument("--num-pages", type=int, default=0,
                    help="arena pages for the full-attention group "
                         "(0 = fully provisioned)")
+    p.add_argument("--prefill-chunk", type=int, default=0,
+                   help="chunked/streamed prefill width (multiple of 32; "
+                        "0 = whole-wave prefill).  Long prompts stream in "
+                        "one chunk per engine step, interleaved with "
+                        "decode, bounding TTFT for the short requests "
+                        "sharing the pool")
     args = p.parse_args()
 
     cfg = base.get_smoke_config(args.arch)
@@ -60,7 +66,8 @@ def main():
         print(f"[{cfg.name}] frontend arch serves static: --paged ignored")
     eng = ServeEngine(model, dparams, ServeConfig(
         max_len=max_len, num_slots=args.slots, paged=paged,
-        num_pages=args.num_pages or None))
+        num_pages=args.num_pages or None,
+        prefill_chunk=args.prefill_chunk or None))
 
     rng = np.random.default_rng(0)
     if cfg.frontend_tokens:

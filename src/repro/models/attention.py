@@ -659,6 +659,168 @@ class SPSAttention:
             cache = KVCache(kc, vc, jnp.minimum(lens, 2**31 - 1))
         return out, cache
 
+    # -- deploy: chunked prefill (cache continuation) -------------------------
+
+    def _chunk_attend(self, params: Params, q_bits: Array, k_bits: Array,
+                      s_v: Array, kc_old: Array, vc_old: Array,
+                      start: Array, valid: Array, positions: Array,
+                      ring, window) -> Array:
+        """Attend a chunk of queries over cached prefix + intra-chunk keys.
+
+        q_bits (B,H,C,dhp) are the chunk queries; kc_old/vc_old are the
+        packed K/V^T ring view holding the first ``start[b]`` tokens of
+        each sequence (ring slot s holds token ``start-1 - ((start-1-s)
+        mod ring)``).  k_bits/s_v are the chunk's own K/V.  Because SPS has
+        no softmax state the two score blocks combine by plain context
+        addition — integer-exact, so chunked == whole-prompt bit-for-bit.
+        Chunk rows at/after ``valid[b]`` are pad: they compute garbage for
+        their own positions but are masked out of every real row."""
+        b, _, c_len, _ = q_bits.shape
+        dh = self.head_dim
+        w = kc_old.shape[2]
+        theta = self._theta_int(params)
+        if self.sps_granularity == "row":
+            row = jnp.clip(positions, 0, ROW_TABLE - 1)        # (B, C)
+            th = jnp.moveaxis(theta[:, row], 0, 1)[..., None]  # (B,H,C,1)
+        else:
+            th = theta[None, :, None, None]
+        # cached prefix: which token each ring slot holds, and whether a
+        # query at absolute position p may see it (window in force)
+        s_idx = jnp.arange(w)[None, :]
+        t_old = start[:, None] - 1 - \
+            jnp.mod(start[:, None] - 1 - s_idx, ring)          # (B, W)
+        m_pre = ((t_old >= 0) & (s_idx < ring))[:, None, None, :]
+        if window:
+            m_pre = m_pre & (t_old[:, None, None, :] >
+                             positions[:, None, :, None] - window)
+        kc_h = self._repeat_kv(kc_old)
+        c_pre = rbmm.rbmm_int(q_bits, kc_h, dh, scheme="xnor",
+                              impl="popcount")                 # (B,H,C,W)
+        probs_pre = jnp.where(m_pre, (c_pre >= th).astype(jnp.uint32),
+                              jnp.uint32(0))
+        probs_p = packing.pack_bits(probs_pre)                 # (B,H,C,W/32)
+        nnz = probs_pre.sum(-1, dtype=jnp.int32)
+        vc_h = self._repeat_kv(vc_old)
+        pc = lax.population_count(
+            probs_p[:, :, :, None, :] & vc_h[:, :, None, :, :]
+        ).astype(jnp.int32).sum(-1)                            # (B,H,C,dh)
+        ctx = 2 * pc - nnz[..., None]
+        # intra-chunk causal block
+        k_h = self._repeat_kv(k_bits)
+        c_in = rbmm.rbmm_int(q_bits, k_h, dh, scheme="xnor",
+                             impl=self.impl)                   # (B,H,C,C)
+        i_idx = jnp.arange(c_len)
+        m_in = (i_idx[None, :, None] >= i_idx[None, None, :]) & \
+               (i_idx[None, None, :] < valid[:, None, None])
+        if window:
+            m_in = m_in & (i_idx[None, None, :] >
+                           i_idx[None, :, None] - window)
+        probs_in = jnp.where(m_in[:, None],
+                             (c_in >= th).astype(jnp.int32), 0)
+        s_v_h = self._repeat_kv(s_v)
+        ctx_in = jnp.einsum("bhck,bhkd->bhcd",
+                            probs_in.astype(jnp.float32), s_v_h,
+                            preferred_element_type=jnp.float32)
+        return ctx + ctx_in.astype(jnp.int32)
+
+    def deploy_prefill_chunk(self, params: Params, x: Array, cache, *,
+                             window=None, start: Optional[Array] = None,
+                             valid_len: Optional[Array] = None
+                             ) -> Tuple[Array, Any]:
+        """Cache-resuming chunk prefill: x (B, C, d) continues sequences
+        whose first ``start[b]`` tokens already live in ``cache``.
+
+        Works on contiguous ``KVCache`` rings and ``PagedKVCache`` block
+        tables (pages covering the chunk must already be mapped — the
+        engine grows them per chunk).  ``valid_len`` (B,) marks how many
+        chunk rows are real; pad rows never write the cache and never leak
+        into real rows, so a fixed chunk width serves every prompt length
+        with ONE compiled shape.  The attend runs BEFORE the ring write:
+        writing first would let a wrapping chunk overwrite prefix tokens
+        still inside earlier rows' windows.  Returns (out (B,C,d),
+        updated cache with ``length = start + valid_len``)."""
+        if self.cross:
+            raise ValueError("chunked prefill is causal self-attention "
+                             "only (cross-attention memory is static)")
+        b, c_len, _ = x.shape
+        hkv, dh = self.num_kv_heads, self.head_dim
+        if start is None:
+            start = cache.length
+        start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+        if valid_len is None:
+            valid = jnp.full((b,), c_len, jnp.int32)
+        else:
+            valid = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32),
+                                     (b,))
+        positions = start[:, None] + jnp.arange(c_len)[None, :]
+        q_bits, k_bits, s_v = self._project_qkv_deploy(params, x, positions)
+        paged = isinstance(cache, PagedKVCache)
+        if paged:
+            page = cache.k_pages.shape[2]
+            ring = cache.ring_len
+            w = cache.block_table.shape[1] * page
+            bt = jnp.clip(cache.block_table, 0, cache.k_pages.shape[0] - 1)
+            kc_old = jnp.moveaxis(cache.k_pages[bt], 1, 2
+                                  ).reshape(b, hkv, w, -1)
+            vc_old = jnp.moveaxis(cache.vt_pages[bt], 1, 3
+                                  ).reshape(b, hkv, dh, w // packing.WORD)
+        else:
+            w = cache.k_bits.shape[2]
+            ring = w
+            kc_old, vc_old = cache.k_bits, cache.vt_bits
+        ctx_int = self._chunk_attend(params, q_bits, k_bits, s_v, kc_old,
+                                     vc_old, start, valid, positions, ring,
+                                     window)
+        out = self._output_deploy(params, ctx_int)
+
+        # -- ring write (select, last-writer-wins) -------------------------
+        # slot s takes chunk token t_new = largest t < start+valid with
+        # t % ring == s, IF that token is the chunk's (>= start); all other
+        # slots keep their old contents.  Pad rows (t >= start+valid) never
+        # write, so interleaved-decode garbage at slot ``start % ring`` is
+        # the only stale data — provably outside every later window.
+        lv = start + valid
+        s_all = jnp.arange(w)
+        t_new = lv[:, None] - 1 - jnp.mod(lv[:, None] - 1 - s_all[None, :],
+                                          ring)                # (B, W)
+        wr = (t_new >= start[:, None]) & (t_new >= 0) & \
+             (s_all[None, :] < ring)
+        j = jnp.clip(t_new - start[:, None], 0, c_len - 1)
+        kg = jnp.take_along_axis(k_bits, j[:, None, :, None],
+                                 axis=2)                       # (B,Hkv,W,dhp)
+        v_bit = jnp.swapaxes(
+            jnp.take_along_axis(s_v, j[:, None, :, None], axis=2) > 0,
+            2, 3)                                              # (B,Hkv,dh,W)
+        wr_words = packing.pack_bits(wr.astype(jnp.uint32))    # (B, W/32)
+        new_words = packing.pack_bits(
+            (v_bit & wr[:, None, None, :]).astype(jnp.uint32))
+        if not paged:
+            kc = jnp.where(wr[:, None, :, None], kg, cache.k_bits)
+            vc = (cache.vt_bits & ~wr_words[:, None, None, :]) | new_words
+            return out, KVCache(kc, vc, lv)
+        # paged: scatter written slots/words through the block table;
+        # unwritten positions route to the trash page 0 (page_size % 32
+        # keeps whole V^T words inside one page)
+        lp = s_all // page
+        off2 = jnp.broadcast_to((s_all % page)[None], (b, w))
+        phys = jnp.take_along_axis(cache.block_table,
+                                   jnp.broadcast_to(lp[None], (b, w)),
+                                   axis=1)
+        phys = jnp.where(wr, phys, 0)
+        kp = cache.k_pages.at[phys, :, off2].set(jnp.swapaxes(kg, 1, 2))
+        wp_n = w // packing.WORD
+        j32 = jnp.arange(wp_n) * packing.WORD
+        wj2 = jnp.broadcast_to(((j32 % page) // packing.WORD)[None],
+                               (b, wp_n))
+        physw = jnp.take_along_axis(cache.block_table,
+                                    jnp.broadcast_to((j32 // page)[None],
+                                                     (b, wp_n)), axis=1)
+        physw = jnp.where(wr_words != 0, physw, 0)
+        merged = (vc_old & ~wr_words[:, None, None, :]) | new_words
+        vp = cache.vt_pages.at[physw, :, :, wj2].set(
+            jnp.moveaxis(merged, 3, 1))
+        return out, cache._replace(k_pages=kp, vt_pages=vp, length=lv)
+
     # -- deploy: cross-attention memory ---------------------------------------
 
     def build_memory_cache(self, params: Params, memory: Array) -> KVCache:

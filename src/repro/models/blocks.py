@@ -203,12 +203,9 @@ class Block:
         h = constrain(h, "batch", None, None)
         if window is None and self.window:
             window = self.window
-        if seq_lens is not None and self.kind != "attn":
-            # recurrent state (mamba/xLSTM) scanned over pad tokens would
-            # drift; the serve engine falls back to per-request prefill
-            raise ValueError(
-                f"ragged prefill (seq_lens) only supports attention "
-                f"blocks, not kind={self.kind!r}")
+        if seq_lens is not None and self.kind == "dec":
+            raise ValueError("ragged prefill (seq_lens) does not support "
+                             "enc-dec decoder blocks")
         if self.kind in ("attn", "hybrid", "dec"):
             a_out, kv = parts["attn"].deploy_prefill(
                 params["attn"], h, positions=positions, window=window,
@@ -216,13 +213,17 @@ class Block:
             if kv is not None:
                 cache["attn"] = kv
             if self.kind == "hybrid":
+                # recurrent state freezes past seq_lens (masked scan), so
+                # right-padded batches stay exact
                 if cache_size:
                     m_out, mc = parts["mamba"].apply(
-                        params["mamba"], h, deploy=True, return_state=True)
+                        params["mamba"], h, deploy=True, return_state=True,
+                        seq_lens=seq_lens)
                     cache["mamba"] = mc
                 else:
                     m_out = parts["mamba"].apply(params["mamba"], h,
-                                                 deploy=True)
+                                                 deploy=True,
+                                                 seq_lens=seq_lens)
                 a_out = 0.5 * (a_out + m_out)
             x = x + a_out
             if self.kind == "dec":
@@ -241,12 +242,44 @@ class Block:
         else:
             if cache_size:
                 out, cc = parts["cell"].apply(params["cell"], h, deploy=True,
-                                              return_state=True)
+                                              return_state=True,
+                                              seq_lens=seq_lens)
                 cache["cell"] = cc
             else:
-                out = parts["cell"].apply(params["cell"], h, deploy=True)
+                out = parts["cell"].apply(params["cell"], h, deploy=True,
+                                          seq_lens=seq_lens)
             x = x + out
         return constrain(x, "batch", None, None), cache
+
+    def deploy_prefill_chunk(self, params: Params, x: Array,
+                             cache: Dict[str, Any], *,
+                             start=None, valid_len=None
+                             ) -> Tuple[Array, Dict[str, Any]]:
+        """Cache-resuming chunk prefill: x (B, C, d) continues sequences
+        whose first ``start`` tokens already live in ``cache`` (see
+        SPSAttention.deploy_prefill_chunk).  Attention-only blocks —
+        recurrent state (mamba/xLSTM) has no chunk-resume face yet, so
+        the serve engine prefills those families whole."""
+        if self.kind != "attn":
+            raise ValueError(
+                f"chunked prefill resumes attention caches only, not "
+                f"kind={self.kind!r} (recurrent families prefill whole "
+                f"prompts)")
+        cfg = self.cfg
+        parts = self._parts()
+        norm = nn.make_norm(cfg.norm, cfg.d_model)
+        h = norm.apply(params["norm1"], x)
+        h = constrain(h, "batch", None, None)
+        a_out, kv = parts["attn"].deploy_prefill_chunk(
+            params["attn"], h, cache["attn"], window=self.window or None,
+            start=start, valid_len=valid_len)
+        x = x + a_out
+        if "ffn" in parts:
+            h2 = norm.apply(params["norm2"], x)
+            x = x + parts["ffn"].apply_deploy(params["ffn"], h2)
+        new_cache = dict(cache)
+        new_cache["attn"] = kv
+        return constrain(x, "batch", None, None), new_cache
 
     def init_cache(self, batch: int, max_len: int,
                    memory_len: int = 0,

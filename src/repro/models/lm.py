@@ -306,24 +306,41 @@ class LMModel:
         return self._logits(dparams, x)
 
     def prefill_with_cache(self, dparams: Params, tokens: Array, *,
-                           max_len: int,
+                           max_len: int = 0,
                            frontend_embeds: Optional[Array] = None,
-                           seq_lens: Optional[Array] = None
+                           seq_lens: Optional[Array] = None,
+                           caches: Optional[List[Dict[str, Any]]] = None,
+                           start: Optional[Array] = None
                            ) -> Tuple[Array, List[Dict[str, Any]]]:
         """Python-loop prefill that returns per-layer decode caches.
 
         ``seq_lens`` (B,) admits a ragged right-padded batch: attention
-        masks keys past each sequence's true length, caches carry
-        per-sequence ring contents/lengths, and the returned logits are
-        read at each sequence's LAST REAL token (position seq_lens[b]-1),
-        not at the padded end."""
+        masks keys past each sequence's true length, recurrent state
+        freezes there (masked scans), caches carry per-sequence ring
+        contents/lengths, and the returned logits are read at each
+        sequence's LAST REAL token (position seq_lens[b]-1), not at the
+        padded end.
+
+        Continuation mode (chunked prefill): passing ``caches`` resumes
+        sequences whose first ``start[b]`` tokens (default: the caches'
+        own lengths) are already written — ``tokens`` is the next chunk,
+        ``seq_lens`` its per-sequence REAL width, and attention sees the
+        cached prefix through the ring / block table.  Attention-only
+        stacks; ``max_len`` is ignored (the caches fix every ring)."""
+        if caches is not None:
+            return self._prefill_continue(dparams, tokens, caches,
+                                          start=start, seq_lens=seq_lens,
+                                          frontend_embeds=frontend_embeds)
+        if max_len <= 0:
+            raise ValueError("prefill_with_cache needs max_len > 0 (or "
+                             "caches= for chunk continuation)")
         x = self._embed_tokens(dparams, tokens, frontend_embeds)
         sl = None
         if seq_lens is not None:
             sl = jnp.asarray(seq_lens, jnp.int32)
             if self.cfg.frontend_tokens:
                 sl = sl + self.cfg.frontend_tokens
-        caches: List[Dict[str, Any]] = []
+        caches_out: List[Dict[str, Any]] = []
         for i, (kind, w) in enumerate(self.plan):
             bp = (jax.tree.map(lambda t: t[i], dparams["blocks"])
                   if self.uniform else dparams["blocks"][i])
@@ -331,13 +348,38 @@ class LMModel:
             cache_size = min(w or max_len, max_len)
             x, cache = blk.deploy_prefill(bp, x, cache_size=cache_size,
                                           seq_lens=sl)
-            caches.append(cache)
+            caches_out.append(cache)
+        return self._logits(dparams, self._last_real(x, sl)), caches_out
+
+    @staticmethod
+    def _last_real(x: Array, sl: Optional[Array]) -> Array:
+        """(B, S, d) -> (B, 1, d) hidden at each sequence's last real
+        token (the padded end when ``sl`` is None)."""
         if sl is None:
-            last = x[:, -1:]
-        else:
-            idx = jnp.clip(sl - 1, 0, x.shape[1] - 1)
-            last = x[jnp.arange(x.shape[0]), idx][:, None]
-        return self._logits(dparams, last), caches
+            return x[:, -1:]
+        idx = jnp.clip(sl - 1, 0, x.shape[1] - 1)
+        return x[jnp.arange(x.shape[0]), idx][:, None]
+
+    def _prefill_continue(self, dparams: Params, tokens: Array,
+                          caches: List[Dict[str, Any]], *,
+                          start: Optional[Array],
+                          seq_lens: Optional[Array],
+                          frontend_embeds: Optional[Array]
+                          ) -> Tuple[Array, List[Dict[str, Any]]]:
+        """One chunk of a cache-resuming prefill (see prefill_with_cache)."""
+        if frontend_embeds is not None or self.cfg.frontend_tokens:
+            raise ValueError("chunked prefill serves token-only decoders")
+        x = self._embed_tokens(dparams, tokens, None)
+        sl = None if seq_lens is None else jnp.asarray(seq_lens, jnp.int32)
+        st = None if start is None else jnp.asarray(start, jnp.int32)
+        new_caches: List[Dict[str, Any]] = []
+        for i, (kind, w) in enumerate(self.plan):
+            bp = (jax.tree.map(lambda t: t[i], dparams["blocks"])
+                  if self.uniform else dparams["blocks"][i])
+            x, cache = self._block(kind, w).deploy_prefill_chunk(
+                bp, x, caches[i], start=st, valid_len=sl)
+            new_caches.append(cache)
+        return self._logits(dparams, self._last_real(x, sl)), new_caches
 
     def init_caches(self, batch: int, max_len: int,
                     paged=None) -> List[Dict[str, Any]]:

@@ -44,6 +44,25 @@ def _proj(dense: BinaryDense, p: Params, x: Array, deploy: bool) -> Array:
     return dense.apply_deploy(p, x) if deploy else dense.apply(p, x)
 
 
+def _live_mask(batch: int, length: int,
+               seq_lens: Optional[Array]) -> Array:
+    """(B, L) bool: True at real positions, False at right-padding."""
+    if seq_lens is None:
+        return jnp.ones((batch, length), bool)
+    return jnp.arange(length)[None, :] < \
+        jnp.asarray(seq_lens, jnp.int32)[:, None]
+
+
+def _freeze_cache(new: XLSTMCache, old: XLSTMCache, live_t: Array
+                  ) -> XLSTMCache:
+    """Per-sequence state freeze for masked scans: sequences whose
+    ``live_t`` (B,) is False keep their old carry (their remaining steps
+    are right-padding)."""
+    return XLSTMCache(*[
+        jnp.where(live_t.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+        for n, o in zip(new, old)])
+
+
 # ---------------------------------------------------------------------------
 # Mamba
 # ---------------------------------------------------------------------------
@@ -126,24 +145,35 @@ class MambaBlock:
         dt = jax.nn.softplus(dt @ params["dt_proj"] + params["dt_bias"])
         return dt, b, c                       # (...,di), (...,st), (...,st)
 
-    def _scan(self, params: Params, u: Array, h0: Array
-              ) -> Tuple[Array, Array]:
+    def _scan(self, params: Params, u: Array, h0: Array,
+              seq_lens: Optional[Array] = None) -> Tuple[Array, Array]:
         """u: (B, L, di).  Sequential selective scan.
-        Returns (y (B, L, di), h_last (B, di, st))."""
+        Returns (y (B, L, di), h_last (B, di, st)).
+
+        ``seq_lens`` (B,) freezes each sequence's state past its true
+        length (masked scan), so right-padded ragged batches produce the
+        exact state of an unpadded prefill; pad-position outputs are
+        garbage the caller must mask/ignore."""
         a = -jnp.exp(params["a_log"])                      # (di, st)
         dt, b, c = self._ssm_params(params, u)             # (B,L,di/st)
+        l = u.shape[1]
+        if seq_lens is None:
+            live = jnp.ones((u.shape[0], l), bool)
+        else:
+            live = jnp.arange(l)[None, :] < \
+                jnp.asarray(seq_lens, jnp.int32)[:, None]
 
         def step(h, ins):
-            u_t, dt_t, b_t, c_t = ins                      # (B,di),(B,di),(B,st)
+            u_t, dt_t, b_t, c_t, m_t = ins                 # (B,di),(B,st),(B,)
             da = jnp.exp(dt_t[..., None] * a[None])        # (B,di,st)
             dbu = dt_t[..., None] * b_t[:, None, :] * u_t[..., None]
-            h = da * h + dbu
+            h = jnp.where(m_t[:, None, None], da * h + dbu, h)
             y = jnp.einsum("bds,bs->bd", h, c_t)
             return h, y
 
         xs = (jnp.moveaxis(u.astype(jnp.float32), 1, 0),
               jnp.moveaxis(dt, 1, 0), jnp.moveaxis(b, 1, 0),
-              jnp.moveaxis(c, 1, 0))
+              jnp.moveaxis(c, 1, 0), jnp.moveaxis(live, 1, 0))
         h_last, ys = lax.scan(step, h0, xs)
         y = jnp.moveaxis(ys, 0, 1) + u * params["d_skip"]
         return y, h_last
@@ -151,8 +181,13 @@ class MambaBlock:
     # -- faces -----------------------------------------------------------------
 
     def apply(self, params: Params, x: Array, *, deploy: bool = False,
-              return_state: bool = False):
-        """x: (B, L, d) -> (B, L, d) [, MambaCache for decode continuation]."""
+              return_state: bool = False,
+              seq_lens: Optional[Array] = None):
+        """x: (B, L, d) -> (B, L, d) [, MambaCache for decode continuation].
+
+        ``seq_lens`` (B,) supports right-padded ragged batches: the SSM
+        state freezes at each sequence's true length and the conv/state
+        caches are read there, not at the padded end."""
         b, l, _ = x.shape
         di = self.d_inner
         xz = _proj(self._in_proj(), params["in_proj"], x, deploy)
@@ -164,15 +199,24 @@ class MambaBlock:
                   for i in range(self.conv_width)) + params["conv_b"]
         u_c = jax.nn.silu(u_c)
         h0 = jnp.zeros((b, di, self.state_size), jnp.float32)
-        y, h_last = self._scan(params, u_c, h0)
+        y, h_last = self._scan(params, u_c, h0, seq_lens=seq_lens)
         y = y * jax.nn.silu(z)
         out = _proj(self._out_proj(), params["out_proj"],
                     y.astype(self.dtype), deploy)
         if return_state:
             # conv cache = last (conv_width-1) raw u inputs; u_p is
             # [zeros(pad), u] so its tail is exactly the causal history even
-            # when l < pad.
-            tail = jnp.swapaxes(u_p[:, u_p.shape[1] - pad:], 1, 2)
+            # when l < pad.  With seq_lens, u_p[sl : sl + pad] is the tail
+            # ending at each sequence's last REAL token (u_p[pad + t] holds
+            # input t, so positions sl-pad .. sl-1 sit there).
+            if seq_lens is None:
+                tail = u_p[:, u_p.shape[1] - pad:]
+            else:
+                sl = jnp.asarray(seq_lens, jnp.int32)
+                idx = jnp.clip(sl[:, None] + jnp.arange(pad)[None, :],
+                               0, u_p.shape[1] - 1)
+                tail = jnp.take_along_axis(u_p, idx[..., None], axis=1)
+            tail = jnp.swapaxes(tail, 1, 2)
             return out, MambaCache(tail.astype(jnp.float32), h_last)
         return out
 
@@ -294,15 +338,19 @@ class MLSTMBlock:
         return q, k, v, ig, fg
 
     def apply(self, params: Params, x: Array, *, deploy: bool = False,
-              return_state: bool = False):
+              return_state: bool = False,
+              seq_lens: Optional[Array] = None):
         b, l, _ = x.shape
         q, k, v, ig, fg = self._qkv_gates(params, x, deploy)
         cache0 = self.init_cache(b)
+        live = _live_mask(b, l, seq_lens)
 
         def step(carry, ins):
-            return self._cell(carry, ins)
+            *qkvg, m_t = ins
+            new, h_out = self._cell(carry, tuple(qkvg))
+            return _freeze_cache(new, carry, m_t), h_out
 
-        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, ig, fg))
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, ig, fg, live))
         last, hs = lax.scan(step, cache0, xs)
         hs = jnp.moveaxis(hs, 0, 1).reshape(b, l, self.d_inner)
         out = _proj(self._out(), params["out"], hs.astype(self.dtype),
@@ -379,11 +427,19 @@ class SLSTMBlock:
         return z, ig, fg + params["f_bias"], og
 
     def apply(self, params: Params, x: Array, *, deploy: bool = False,
-              return_state: bool = False):
+              return_state: bool = False,
+              seq_lens: Optional[Array] = None):
         b, l, _ = x.shape
         z, ig, fg, og = self._zifo(params, x, deploy)
-        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (z, ig, fg, og))
-        last, hs = lax.scan(self._cell, self.init_cache(b), xs)
+        live = _live_mask(b, l, seq_lens)
+
+        def step(carry, ins):
+            *zifo, m_t = ins
+            new, h = self._cell(carry, tuple(zifo))
+            return _freeze_cache(new, carry, m_t), h
+
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (z, ig, fg, og, live))
+        last, hs = lax.scan(step, self.init_cache(b), xs)
         hs = jnp.moveaxis(hs, 0, 1)
         out = _proj(self._out(), params["out_proj"],
                     hs.astype(self.dtype), deploy)

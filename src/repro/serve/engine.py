@@ -25,6 +25,16 @@ lowest-priority slot back to the scheduler queue (recompute-on-resume)
 instead of deadlocking.  Decode stays ONE jit'd pooled step — block-table
 gathers resolve each slot's pages inside it.
 
+With ``ServeConfig.prefill_chunk`` admission becomes *chunked*: prompts
+longer than the chunk occupy a slot as an in-flight prefill and stream
+through ``LM.prefill_with_cache``'s cache-continuation mode one fixed-size
+chunk per engine iteration, INTERLEAVED with the pooled decode step — so
+occupied slots keep emitting tokens while a long prompt loads and
+time-to-first-token stays bounded for the short requests sharing the pool.
+In-flight prefills are preemption-safe (eviction mid-prefill requeues the
+request; resume recomputes from the prompt) and grow their pages chunk by
+chunk in paged mode.
+
 The binary cache is what makes deep pools cheap: each slot's decode state
 is 16-32x smaller than a bf16 KV cache (the paper's edge bandwidth story,
 transferred to serving), so slot count — i.e. serving concurrency — scales
@@ -33,14 +43,15 @@ win, slot occupancy/utilization and page-arena occupancy/fragmentation.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+import heapq
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import packing
 from repro.models.attention import PagedKVCache, PageSpec
 from repro.serve import kvcache, sampler as sampler_lib
 
@@ -69,6 +80,15 @@ class ServeConfig:
       num_pages: usable pages in the shared full-capacity arena; defaults
         to ``num_slots * max_blocks`` (fully provisioned — no preemption).
         Sizing it below that is safe: exhaustion preempts, never deadlocks.
+      prefill_chunk: chunked/streamed prefill width in tokens (None =
+        whole-wave prefill).  Must be a positive multiple of 32 (the
+        uint32 packing word, so chunk boundaries never straddle a V^T
+        word).  Prompts longer than the chunk prefill one chunk per
+        engine iteration, interleaved with pooled decode steps —
+        token-for-token identical to whole-prompt prefill, but decoding
+        slots stay live while long prompts load.  Pure-attention stacks
+        only; recurrent families (hybrid/ssm) ignore it and prefill
+        whole prompts.
     """
     max_len: int = 2048
     sampler: str = "greedy"          # greedy | temperature | top_k
@@ -81,6 +101,15 @@ class ServeConfig:
     page_size: int = 32
     max_blocks: Optional[int] = None
     num_pages: Optional[int] = None
+    prefill_chunk: Optional[int] = None
+
+    def __post_init__(self):
+        if self.prefill_chunk is not None and (
+                self.prefill_chunk <= 0 or
+                self.prefill_chunk % packing.WORD):
+            raise ValueError(
+                f"prefill_chunk must be a positive multiple of the "
+                f"packing word ({packing.WORD}), got {self.prefill_chunk}")
 
     def page_spec(self) -> PageSpec:
         """Resolve the paged-cache sizing (PageSpec validates itself)."""
@@ -119,38 +148,45 @@ class Scheduler:
     ``pop`` returns the highest-priority request, oldest first among ties
     — with the default priority 0 everywhere this is plain FIFO.
     ``requeue`` reinserts a preempted request at the head of its class so
-    it resumes before newer peers.  Fairness/wave-packing policies slot in
-    here without touching the engine loop."""
+    it resumes before newer peers (the most recently requeued first).
+    Fairness/wave-packing policies slot in here without touching the
+    engine loop.
+
+    Implementation: a heap on ``(-priority, arrival_seq)`` — ``pop`` is
+    O(log n) instead of the old full-deque scan the engine paid on every
+    step.  ``add`` draws increasing sequence numbers (FIFO within class);
+    ``requeue`` draws decreasing ones (ahead of every queued peer, and of
+    any earlier requeue)."""
 
     def __init__(self, requests: Sequence[Request] = ()):
-        self._queue = collections.deque(requests)
+        self._heap: List[Tuple[int, int, Request]] = []
+        self._seq = 0        # add(): increasing (FIFO within class)
+        self._front = 0      # requeue(): decreasing (before peers)
+        for r in requests:
+            self.add(r)
 
     def add(self, request: Request) -> None:
-        """Append a request at the queue tail."""
-        self._queue.append(request)
+        """Enqueue a request behind its priority-class peers."""
+        self._seq += 1
+        heapq.heappush(self._heap, (-request.priority, self._seq, request))
 
     def requeue(self, request: Request) -> None:
-        """Reinsert a preempted request at the queue head."""
-        self._queue.appendleft(request)
+        """Reinsert a preempted request ahead of its priority-class
+        peers so it resumes before newer work."""
+        self._front -= 1
+        heapq.heappush(self._heap, (-request.priority, self._front,
+                                    request))
 
     def pop(self) -> Request:
         """Remove and return the next request (highest priority, FIFO
         within the class)."""
-        best = 0
-        for i, r in enumerate(self._queue):
-            if r.priority > self._queue[best].priority:
-                best = i
-        if best == 0:
-            return self._queue.popleft()
-        req = self._queue[best]
-        del self._queue[best]
-        return req
+        return heapq.heappop(self._heap)[2]
 
     def __len__(self) -> int:
-        return len(self._queue)
+        return len(self._heap)
 
     def __bool__(self) -> bool:
-        return bool(self._queue)
+        return bool(self._heap)
 
 
 class _SlotState:
@@ -175,12 +211,41 @@ class _SlotState:
         return len(self.generated) >= self.request.max_new_tokens
 
 
+class _PrefillState:
+    """An in-flight chunked prefill occupying a pool slot.
+
+    ``toks`` is prompt + pre-preemption tokens (``pre``); ``done`` counts
+    tokens already written to the slot's caches.  The slot joins the
+    decode pool only once every chunk has landed."""
+
+    __slots__ = ("request", "toks", "pre", "done", "admit_seq")
+
+    def __init__(self, request: Request, toks: np.ndarray,
+                 pre: Sequence[int], admit_seq: int):
+        self.request = request
+        self.toks = toks
+        self.pre: List[int] = list(pre)
+        self.done = 0
+        self.admit_seq = admit_seq
+
+
+def _pow2_bucket(n: int, lo: int = 16) -> int:
+    """Smallest power of two >= n (>= lo) — the fallback-prefill length
+    buckets that bound compile count to O(log max_prompt)."""
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
 class ServeEngine:
     def __init__(self, model, dparams: Params, cfg: ServeConfig):
         self.model = model
         self.dparams = dparams
         self.cfg = cfg
         self._decode_jit = None
+        self._chunk_jit = None
+        self._fallback_jit = None
         self._sample = {
             "greedy": lambda lg, k: sampler_lib.greedy(lg),
             "temperature": lambda lg, k: sampler_lib.temperature(
@@ -199,6 +264,32 @@ class ServeEngine:
             return nxt, caches, key
 
         self._decode_jit = jax.jit(step, donate_argnums=(2,))
+
+    def _build_chunk_step(self):
+        """One fixed-width prefill chunk for one pool slot: gather the
+        slot's cache rows, continue the prefill at offset ``start``
+        (``valid`` real tokens out of the chunk width), commit the rows
+        back.  slot/start/valid are traced (1,) arrays so every chunk of
+        every prompt reuses ONE compiled shape."""
+
+        def step(dparams, toks, caches, slot, start, valid):
+            sub = kvcache.extract_slots(caches, slot)
+            logits, sub = self.model.prefill_with_cache(
+                dparams, toks, caches=sub, start=start, seq_lens=valid)
+            return logits, kvcache.writeback_slots(caches, sub, slot)
+
+        self._chunk_jit = jax.jit(step, donate_argnums=(2,))
+
+    def _build_fallback(self):
+        """Jit'd per-request prefill for recurrent-family admission;
+        callers pad prompts to power-of-two buckets (``_pow2_bucket``) so
+        the compile count is O(log max_prompt), not O(#distinct lengths)."""
+
+        def pre(dparams, toks, seq_lens, max_len):
+            return self.model.prefill_with_cache(
+                dparams, toks, max_len=max_len, seq_lens=seq_lens)
+
+        self._fallback_jit = jax.jit(pre, static_argnums=(3,))
 
     # -- public API ---------------------------------------------------------------
 
@@ -352,6 +443,9 @@ class ServeEngine:
         scheduler = Scheduler(requests)
         pool = kvcache.SlotPool(max(1, min(self.cfg.num_slots,
                                            len(requests) or 1)))
+        # chunked prefill needs the cache-continuation path, which is
+        # attention-only (recurrent state has no chunk-resume face)
+        chunk = self.cfg.prefill_chunk if self._ragged_ok else None
         arenas: Dict[int, kvcache.PageArena] = {}
         rings: List[Optional[int]] = []
         if spec:
@@ -368,12 +462,16 @@ class ServeEngine:
             caches = self.model.init_caches(pool.num_slots, self.cfg.max_len)
         token_buf = np.zeros((pool.num_slots, 1), np.int32)
         states: Dict[int, _SlotState] = {}
+        inflight: Dict[int, _PrefillState] = {}
         results: Dict[int, np.ndarray] = {}
         resumed: Dict[int, List[int]] = {}   # rid -> tokens before preempt
         if self._decode_jit is None:
             self._build_decode()
+        if chunk and self._chunk_jit is None:
+            self._build_chunk_step()
         key = jax.random.PRNGKey(self.cfg.seed)
         prefill_batches = 0
+        prefill_chunks = 0
         preemptions = 0
         admit_seq = 0
         peak_pages = 0       # true simultaneous peak across all arenas
@@ -395,18 +493,60 @@ class ServeEngine:
         def preempt(slot: int) -> None:
             """Evict a slot back to the queue (recompute-on-resume): its
             pages free immediately; the prompt + tokens-so-far re-prefill
-            on re-admission."""
-            st = release_slot(slot)
-            resumed[st.request.rid] = list(st.generated)
-            scheduler.requeue(st.request)
+            on re-admission.  Mid-prefill slots are evictable too — their
+            chunks simply recompute from the prompt on resume."""
+            if slot in inflight:
+                st = inflight.pop(slot)
+                pool.release(slot)
+                for arena in arenas.values():
+                    arena.release(slot)
+                if st.pre:
+                    resumed[st.request.rid] = list(st.pre)
+                scheduler.requeue(st.request)
+                return
+            dst = release_slot(slot)
+            resumed[dst.request.rid] = list(dst.generated)
+            scheduler.requeue(dst.request)
+
+        def pick_victim() -> int:
+            """Lowest priority first; most recently admitted among ties —
+            over decoding AND mid-prefill slots."""
+            def keyf(s):
+                stt = states.get(s) or inflight[s]
+                return (stt.request.priority, -stt.admit_seq)
+            return min(list(states) + list(inflight), key=keyf)
+
+        def peak() -> None:
+            nonlocal peak_pages
+            peak_pages = max(peak_pages, sum(
+                a.used_pages for a in arenas.values()))
 
         while scheduler or pool.active_count:
             # -- admission: fill free slots from the queue ------------------
             admitted: List[Tuple[int, Request]] = []
             while scheduler and pool.free_count:
                 req = scheduler.pop()
-                plen = len(req.tokens) + len(resumed.get(req.rid, ()))
+                pre = resumed.get(req.rid, [])
+                plen = len(req.tokens) + len(pre)
                 slot = pool.alloc(req.rid)
+                if chunk and plen > chunk:
+                    # chunk-aware packing: long prompts leave the wave and
+                    # stream in as in-flight prefills; reserve only their
+                    # FIRST chunk's pages now, the rest grows per chunk
+                    if arenas and not all(a.can_grow(slot, chunk)
+                                          for a in arenas.values()):
+                        pool.release(slot)
+                        scheduler.requeue(req)
+                        break
+                    for arena in arenas.values():
+                        arena.grow(slot, chunk)
+                    toks = np.concatenate(
+                        [np.asarray(req.tokens, np.int32),
+                         np.asarray(resumed.pop(req.rid, []), np.int32)])
+                    inflight[slot] = _PrefillState(req, toks, pre,
+                                                   admit_seq)
+                    admit_seq += 1
+                    continue
                 # reserve prompt + first decode write (plen + 1): admitting
                 # on prompt pages alone could prefill a request only for
                 # its own first growth step to preempt it straight back
@@ -436,13 +576,60 @@ class ServeEngine:
                         stream_cb(req.rid, len(res), tok)
                     if st.push(tok):
                         retire(slot)
-            if not pool.active_count:
+            # -- in-flight prefills: one chunk each, decode stays live ------
+            for slot in sorted(inflight):
+                if slot not in inflight:     # preempted by a peer's growth
+                    continue
+                st = inflight[slot]
+                n = min(chunk, len(st.toks) - st.done)
+                final = st.done + n == len(st.toks)
+                # grow pages to cover this chunk (+ the first decode write
+                # when it completes the prompt), preempting on exhaustion
+                if arenas:
+                    target = st.done + n + (1 if final else 0)
+                    evicted = False
+                    while not all(a.can_grow(slot, target)
+                                  for a in arenas.values()):
+                        victim = pick_victim()
+                        preempt(victim)
+                        preemptions += 1
+                        if victim == slot:
+                            evicted = True
+                            break
+                    if evicted:
+                        continue
+                    for arena in arenas.values():
+                        arena.grow(slot, target)
+                    peak()
+                caches = self._sync_tables(caches, arenas, rings)
+                buf = np.zeros((1, chunk), np.int32)
+                buf[0, :n] = st.toks[st.done:st.done + n]
+                logits, caches = self._chunk_jit(
+                    self.dparams, jnp.asarray(buf), caches,
+                    jnp.asarray([slot], jnp.int32),
+                    jnp.asarray([st.done], jnp.int32),
+                    jnp.asarray([n], jnp.int32))
+                prefill_chunks += 1
+                st.done += n
+                if final:
+                    del inflight[slot]
+                    key, sub = jax.random.split(key)
+                    tok = int(np.asarray(self._sample(logits, sub))[0, 0])
+                    sst = _SlotState(st.request, self.cfg.eos_id,
+                                     len(st.toks), st.admit_seq, st.pre)
+                    states[slot] = sst
+                    token_buf[slot, 0] = tok
+                    if stream_cb:
+                        stream_cb(st.request.rid, len(st.pre), tok)
+                    if sst.push(tok):
+                        retire(slot)
+            if not states:
                 continue
             # -- paged growth: cover the next token; preempt on exhaustion --
             if arenas:
                 while True:
                     ok = True
-                    for slot in pool.active_slots:
+                    for slot in sorted(states):
                         need = states[slot].cache_len + 1
                         if not all(a.grow(slot, need)
                                    for a in arenas.values()):
@@ -450,24 +637,25 @@ class ServeEngine:
                             break
                     if ok:
                         break
-                    victim = min(states, key=lambda s: (
-                        states[s].request.priority, -states[s].admit_seq))
-                    preempt(victim)
+                    preempt(pick_victim())
                     preemptions += 1
-                    if not pool.active_count:
+                    if not states:
                         break
-                if not pool.active_count:
+                if not states:
                     continue
-                peak_pages = max(peak_pages, sum(
-                    a.used_pages for a in arenas.values()))
+                peak()
                 caches = self._sync_tables(caches, arenas, rings)
             # -- one pooled decode step over every slot ---------------------
+            # (mid-prefill slots ride along as garbage rows: their one
+            # stale write per iteration lands at the position the NEXT
+            # chunk overwrites — or outside every later window — and their
+            # sampled tokens are simply never read)
             token, caches, key = self._decode_jit(
                 self.dparams, jnp.asarray(token_buf), caches, key)
             toks = np.asarray(token)
-            pool.tick()
+            pool.tick(busy=len(states))
             token_buf = toks.copy()
-            for slot in pool.active_slots:
+            for slot in sorted(states):
                 st = states[slot]
                 st.cache_len += 1
                 tok = int(toks[slot, 0])
@@ -486,6 +674,7 @@ class ServeEngine:
             decode_steps=pool.decode_steps,
             arenas=list(arenas.values()) if arenas else None)
         report["prefill_batches"] = float(prefill_batches)
+        report["prefill_chunks"] = float(prefill_chunks)
         report["requests"] = float(len(requests))
         if spec:
             report["preemptions"] = float(preemptions)
@@ -504,12 +693,15 @@ class ServeEngine:
         ``resumed`` carries tokens generated before a preemption; they are
         appended to the prompt and recomputed (recompute-on-resume).
         Equal-length waves batch directly; mixed-length waves use ragged
-        right-padded prefill (attention stacks) or fall back to
-        per-request prefill (recurrent-state families).  In paged mode the
-        prefill ring is sized to the wave's longest prompt so rings never
-        wrap and ring slot s == token position s — the page scatter in
-        ``kvcache.insert_slots`` relies on that.  Returns (caches, first
-        sampled token per request, key)."""
+        right-padded prefill (attention stacks) or fall back to jit'd
+        per-request prefill on power-of-two length buckets
+        (recurrent-state families; masked scans freeze state at the true
+        length, so padding is exact AND the compile count stays
+        O(log max_prompt) instead of one per distinct prompt length).
+        In paged mode the prefill ring is sized to the wave's longest
+        prompt so rings never wrap and ring slot s == token position s —
+        the page scatter in ``kvcache.insert_slots`` relies on that.
+        Returns (caches, first sampled token per request, key)."""
         toks = [np.concatenate([np.asarray(r.tokens, np.int32),
                                 np.asarray(res, np.int32)])
                 for r, res in zip(reqs, resumed)]
@@ -527,9 +719,21 @@ class ServeEngine:
                 self.dparams, jnp.asarray(batch), max_len=prefill_len,
                 seq_lens=np.asarray(lens, np.int32))
         else:
-            parts = [self.model.prefill_with_cache(
-                self.dparams, jnp.asarray(t[None]),
-                max_len=prefill_len) for t in toks]
+            if self._fallback_jit is None:
+                self._build_fallback()
+            # one bucket for the whole wave: per-request caches must
+            # concatenate (equal ring sizes), and in paged mode the ring
+            # must stay wrap-free for real positions, so the bucket sizes
+            # the prefill ring too
+            bucket = _pow2_bucket(smax)
+            ring = bucket if self.cfg.paged else prefill_len
+            parts = []
+            for t in toks:
+                buf = np.zeros((1, bucket), np.int32)
+                buf[0, :len(t)] = t
+                parts.append(self._fallback_jit(
+                    self.dparams, jnp.asarray(buf),
+                    np.asarray([len(t)], np.int32), ring))
             logits = jnp.concatenate([lg for lg, _ in parts], axis=0)
             seq_caches = jax.tree.map(
                 lambda *xs: jnp.concatenate(xs, axis=0),

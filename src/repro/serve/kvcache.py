@@ -198,6 +198,45 @@ def insert_slots(pool: Caches, seq_caches: Caches,
     return jax.tree.map(merge, pool, seq_caches, is_leaf=_paged_leaf)
 
 
+def extract_slots(pool: Caches, slots) -> Caches:
+    """Gather the decode state of ``slots`` as a batch-n cache pytree —
+    the read-side inverse of ``insert_slots`` (jit-friendly; ``slots``
+    may be a traced index array).
+
+    Contiguous leaves gather their batch rows; paged leaves keep the
+    SHARED page arenas whole and gather only block-table/length rows, so
+    a chunk prefill on the extracted view writes straight into the pool's
+    pages.  Pair with ``writeback_slots`` to commit updated state."""
+    idx = jnp.asarray(slots)
+
+    def ex(p):
+        if isinstance(p, PagedKVCache):
+            return p._replace(block_table=p.block_table[idx],
+                              length=p.length[idx])
+        return p[idx]
+
+    return jax.tree.map(ex, pool, is_leaf=_paged_leaf)
+
+
+def writeback_slots(pool: Caches, sub: Caches, slots) -> Caches:
+    """Commit an ``extract_slots`` view back into the pool.
+
+    Contiguous leaves scatter their rows; paged leaves adopt the view's
+    page arrays wholesale (the view's pages ARE the pool's pages,
+    functionally updated) and scatter only the per-slot lengths — block
+    tables stay pool-owned (the host-side ``PageArena`` is authoritative
+    and re-syncs them)."""
+    idx = jnp.asarray(slots)
+
+    def wb(p, s):
+        if isinstance(p, PagedKVCache):
+            return p._replace(k_pages=s.k_pages, vt_pages=s.vt_pages,
+                              length=p.length.at[idx].set(s.length))
+        return p.at[idx].set(s.astype(p.dtype))
+
+    return jax.tree.map(wb, pool, sub, is_leaf=_paged_leaf)
+
+
 def reset_slots(pool: Caches, slots: Sequence[int]) -> Caches:
     """Zero the given slots' decode state.
 
@@ -384,10 +423,13 @@ class SlotPool:
 
     # -- stats --------------------------------------------------------------
 
-    def tick(self) -> None:
-        """Record one pooled decode step for utilization accounting."""
+    def tick(self, busy: Optional[int] = None) -> None:
+        """Record one pooled decode step for utilization accounting.
+        ``busy`` overrides the busy-slot count (the engine passes the
+        number of DECODING slots so mid-prefill slots don't inflate
+        utilization); defaults to every allocated slot."""
         self.decode_steps += 1
-        self.busy_slot_steps += self.active_count
+        self.busy_slot_steps += self.active_count if busy is None else busy
 
     @property
     def utilization(self) -> float:

@@ -1,0 +1,226 @@
+"""Chunked/streamed prefill: the cache-continuation path must be
+token-for-token identical to whole-prompt prefill across dense/MoE/SWA
+archs, in both contiguous-ring and paged layouts, at every chunk size —
+including chunks that don't divide the prompt.  Mid-prefill preemption
+must resume exactly (recompute), and decoding slots must keep emitting
+tokens while a long prompt is still chunk-prefilling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.models.lm import build_model
+from repro.serve import kvcache
+from repro.serve.engine import (Request, ServeConfig, ServeEngine,
+                                _pow2_bucket)
+
+
+def _build(arch):
+    cfg = base.get_smoke_config(arch)
+    model = build_model(cfg)
+    dparams = model.convert(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, dparams
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    return _build("smollm-135m")
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in lens]
+
+
+# ---------------------------------------------------------------------------
+# Model-level continuation: bit-for-bit cache + logits equality
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunks", [(32, 13), (32, 32, 13), (64, 13)],
+                         ids=lambda c: "+".join(map(str, c)))
+def test_chunk_continuation_bitwise(smollm, chunks):
+    """Prefilling a prompt through prefill_with_cache's continuation mode
+    (fixed chunk width, ragged valid_len) must leave caches BITWISE equal
+    to a whole-prompt prefill scattered into the same fresh pool, and
+    produce the same next-token logits."""
+    cfg, model, dparams = smollm
+    total = sum(chunks)
+    (toks,) = _prompts(cfg, [total])
+    logits_w, seq = model.prefill_with_cache(
+        dparams, jnp.asarray(toks[None]), max_len=128)
+    pool_w = kvcache.insert_slots(model.init_caches(1, 128), seq, [0])
+    pool_c = model.init_caches(1, 128)
+    width = max(chunks)
+    off = 0
+    for n in chunks:
+        buf = np.zeros((1, width), np.int32)
+        buf[0, :n] = toks[off:off + n]
+        sub = kvcache.extract_slots(pool_c, [0])
+        logits_c, sub = model.prefill_with_cache(
+            dparams, jnp.asarray(buf), caches=sub,
+            start=np.asarray([off], np.int32),
+            seq_lens=np.asarray([n], np.int32))
+        pool_c = kvcache.writeback_slots(pool_c, sub, [0])
+        off += n
+    for a, b in zip(jax.tree.leaves(pool_w), jax.tree.leaves(pool_c)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(logits_w), np.asarray(logits_c),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level equivalence across archs / layouts / chunk sizes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [32, 64])
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+def test_chunked_serve_matches_whole_prefill(smollm, chunk, paged):
+    """Mixed-length trace with prompts that chunk evenly, not at all, and
+    with a non-dividing tail — outputs must match unchunked serving."""
+    cfg, model, dparams = smollm
+    prompts = _prompts(cfg, (45, 5, 70, 64))
+    ref, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=128, num_slots=2)).generate(prompts, max_new_tokens=4)
+    out, report = ServeEngine(model, dparams, ServeConfig(
+        max_len=128, num_slots=2, paged=paged,
+        prefill_chunk=chunk)).generate(prompts, max_new_tokens=4)
+    for i, (a, b) in enumerate(zip(ref, out)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    assert report["prefill_chunks"] > 0
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "gemma3-27b"])
+def test_chunked_serve_moe_and_swa(arch):
+    """MoE routing and (mixed local/global) sliding windows through the
+    chunk path, contiguous and paged."""
+    cfg, model, dparams = _build(arch)
+    prompts = _prompts(cfg, (45, 5, 33), seed=7)
+    ref, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=96, num_slots=2)).generate(prompts, max_new_tokens=3)
+    for paged in (False, True):
+        out, report = ServeEngine(model, dparams, ServeConfig(
+            max_len=96, num_slots=2, paged=paged,
+            prefill_chunk=32)).generate(prompts, max_new_tokens=3)
+        for i, (a, b) in enumerate(zip(ref, out)):
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"{arch} paged={paged} request {i}")
+        assert report["prefill_chunks"] >= 2  # 45 and 33 both chunk
+
+
+def test_recurrent_families_ignore_chunking():
+    """hybrid/ssm stacks have no attention-only continuation path; the
+    engine must serve them whole-prompt (and still exactly) with
+    prefill_chunk set."""
+    for arch in ("hymba-1.5b", "xlstm-350m"):
+        cfg, model, dparams = _build(arch)
+        prompts = _prompts(cfg, (40, 5), seed=11)
+        ref, _ = ServeEngine(model, dparams, ServeConfig(
+            max_len=64, num_slots=2)).generate(prompts, max_new_tokens=3)
+        out, report = ServeEngine(model, dparams, ServeConfig(
+            max_len=64, num_slots=2, prefill_chunk=32)).generate(
+                prompts, max_new_tokens=3)
+        for i, (a, b) in enumerate(zip(ref, out)):
+            np.testing.assert_array_equal(a, b,
+                                          err_msg=f"{arch} request {i}")
+        assert report["prefill_chunks"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Liveness + preemption
+# ---------------------------------------------------------------------------
+
+
+def test_decode_stays_live_during_chunked_prefill(smollm):
+    """While a long prompt chunk-prefills, the already-admitted short
+    request must keep emitting tokens — the whole point of chunking."""
+    cfg, model, dparams = smollm
+    short, long = _prompts(cfg, (4, 96), seed=13)
+    seen = []
+    eng = ServeEngine(model, dparams, ServeConfig(
+        max_len=128, num_slots=2, prefill_chunk=32))
+    results, report = eng.serve(
+        [Request(rid=0, tokens=short, max_new_tokens=8),
+         Request(rid=1, tokens=long, max_new_tokens=3)],
+        stream_cb=lambda rid, i, tok: seen.append(rid))
+    assert report["prefill_chunks"] == 3.0          # 96-token prompt
+    first_long = seen.index(1)
+    # the short request decoded through every chunk iteration: one token
+    # at admission plus one per interleaved decode step before the long
+    # prompt's first token
+    assert seen[:first_long].count(0) >= 3
+    # and both results are exactly the solo outputs
+    for rid, (p, n) in enumerate([(short, 8), (long, 3)]):
+        solo, _ = ServeEngine(model, dparams, ServeConfig(
+            max_len=128)).generate(p[None, :], max_new_tokens=n)
+        np.testing.assert_array_equal(solo[0], results[rid])
+
+
+def test_preemption_mid_prefill_resumes_exactly(smollm):
+    """A tight arena evicts the low-priority in-flight prefill; it must
+    requeue, re-prefill from scratch, and still match solo decoding."""
+    cfg, model, dparams = smollm
+    pa, pb = _prompts(cfg, (4, 64), seed=17)
+    eng = ServeEngine(model, dparams, ServeConfig(
+        max_len=96, num_slots=2, paged=True, page_size=32, max_blocks=3,
+        num_pages=3, prefill_chunk=32))
+    results, report = eng.serve(
+        [Request(rid=0, tokens=pa, max_new_tokens=30, priority=1),
+         Request(rid=1, tokens=pb, max_new_tokens=3, priority=0)])
+    assert report["preemptions"] >= 1.0
+    for rid, (p, n) in enumerate([(pa, 30), (pb, 3)]):
+        solo, _ = ServeEngine(model, dparams, ServeConfig(
+            max_len=128)).generate(p[None, :], max_new_tokens=n)
+        np.testing.assert_array_equal(solo[0], results[rid],
+                                      err_msg=f"rid {rid}")
+
+
+def test_preempted_decoder_resumes_through_chunked_readmission(smollm):
+    """A decoding slot preempted after generating tokens re-admits through
+    the CHUNKED path when prompt+generated exceeds the chunk, and its
+    recompute-resume stays exact."""
+    cfg, model, dparams = smollm
+    pa, pb = _prompts(cfg, (30, 40), seed=19)
+    eng = ServeEngine(model, dparams, ServeConfig(
+        max_len=128, num_slots=2, paged=True, page_size=32, max_blocks=4,
+        num_pages=4, prefill_chunk=32))
+    results, report = eng.serve(
+        [Request(rid=0, tokens=pa, max_new_tokens=40, priority=0),
+         Request(rid=1, tokens=pb, max_new_tokens=40, priority=1)])
+    assert report["preemptions"] >= 1.0
+    for rid, (p, n) in enumerate([(pa, 40), (pb, 40)]):
+        solo, _ = ServeEngine(model, dparams, ServeConfig(
+            max_len=128)).generate(p[None, :], max_new_tokens=n)
+        np.testing.assert_array_equal(solo[0], results[rid],
+                                      err_msg=f"rid {rid}")
+
+
+# ---------------------------------------------------------------------------
+# Config validation + helpers
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_chunk_validation():
+    for bad in (31, 48, 0, -32):
+        with pytest.raises(ValueError, match="multiple"):
+            ServeConfig(prefill_chunk=bad)
+    assert ServeConfig(prefill_chunk=64).prefill_chunk == 64
+    assert ServeConfig().prefill_chunk is None
+
+
+def test_pow2_bucket():
+    assert _pow2_bucket(1) == 16
+    assert _pow2_bucket(16) == 16
+    assert _pow2_bucket(17) == 32
+    assert _pow2_bucket(100) == 128
+
+
+def test_chunk_rejects_recurrent_blocks(smollm):
+    from repro.models.blocks import Block
+    cfg, model, dparams = _build("xlstm-350m")
+    blk = Block(cfg, kind="mlstm")
+    with pytest.raises(ValueError, match="attention"):
+        blk.deploy_prefill_chunk({}, jnp.zeros((1, 4, cfg.d_model)), {})

@@ -1,0 +1,99 @@
+"""Scheduler semantics, pinned by property test: the O(log n) heap
+implementation must be observationally identical to the reference
+linear-scan deque it replaced — highest priority first, FIFO within a
+priority class, and requeued (preempted) requests resume before every
+queued peer of their class, most recent requeue first."""
+import collections
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.serve.engine import Request, Scheduler
+
+
+class _DequeScheduler:
+    """The pre-heap reference implementation (PR 2), kept verbatim as the
+    semantic oracle."""
+
+    def __init__(self, requests=()):
+        self._queue = collections.deque(requests)
+
+    def add(self, request):
+        self._queue.append(request)
+
+    def requeue(self, request):
+        self._queue.appendleft(request)
+
+    def pop(self):
+        best = 0
+        for i, r in enumerate(self._queue):
+            if r.priority > self._queue[best].priority:
+                best = i
+        if best == 0:
+            return self._queue.popleft()
+        req = self._queue[best]
+        del self._queue[best]
+        return req
+
+    def __len__(self):
+        return len(self._queue)
+
+
+def _req(rid, priority):
+    return Request(rid=rid, tokens=np.ones((1,), np.int32),
+                   max_new_tokens=1, priority=priority)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_scheduler_matches_deque_reference(seed, n_prios):
+    """Random interleavings of add / requeue / pop must produce the exact
+    same pop order as the reference implementation."""
+    rng = np.random.default_rng(seed)
+    heap, ref = Scheduler(), _DequeScheduler()
+    popped = []          # pool of requests eligible for requeue
+    next_rid = 0
+    for _ in range(60):
+        op = rng.random()
+        if op < 0.45 or (len(ref) == 0 and not popped):
+            r = _req(next_rid, int(rng.integers(0, n_prios)))
+            next_rid += 1
+            heap.add(r)
+            ref.add(r)
+        elif op < 0.6 and popped:
+            # requeue a previously popped request (preemption resume)
+            r = popped.pop(int(rng.integers(len(popped))))
+            heap.requeue(r)
+            ref.requeue(r)
+        elif len(ref):
+            a, b = heap.pop(), ref.pop()
+            assert a.rid == b.rid, (a.rid, b.rid)
+            popped.append(a)
+        assert len(heap) == len(ref)
+    while len(ref):
+        assert heap.pop().rid == ref.pop().rid
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_scheduler_seeded_construction_matches(seed):
+    """Constructor seeding is equivalent to sequential add()s."""
+    rng = np.random.default_rng(seed)
+    reqs = [_req(i, int(rng.integers(0, 3))) for i in range(12)]
+    a = Scheduler(reqs)
+    b = Scheduler()
+    for r in reqs:
+        b.add(r)
+    order_a = [a.pop().rid for _ in range(len(reqs))]
+    order_b = [b.pop().rid for _ in range(len(reqs))]
+    assert order_a == order_b
+
+
+def test_scheduler_fifo_within_class_and_requeue_front():
+    s = Scheduler([_req(i, p) for i, p in enumerate([0, 2, 1, 2, 0])])
+    assert [s.pop().rid for _ in range(5)] == [1, 3, 2, 0, 4]
+    # requeues jump their class queue; later requeues beat earlier ones
+    s.add(_req(10, 1))
+    s.requeue(_req(11, 1))
+    s.requeue(_req(12, 1))
+    assert [s.pop().rid for _ in range(3)] == [12, 11, 10]
