@@ -1,6 +1,6 @@
 """Static vs continuous vs chunked vs paged scheduling on the binary cache.
 
-Replays the same mixed short/long request trace through four schedulers:
+Replays the same mixed short/long request trace through the schedulers:
 
   static      requests grouped into pool-sized waves; every wave pads to
               its longest prompt and decodes in lockstep until the LAST
@@ -18,6 +18,17 @@ Replays the same mixed short/long request trace through four schedulers:
               pages their tokens occupy, the arena is sized to a fraction
               of the contiguous footprint (--pages-frac), and exhaustion
               preempts the lowest-priority slot instead of deadlocking.
+              Run twice: ``prefix_share=False`` (PR 2 one-owner pages)
+              and ``prefix_share=True`` — the trace prepends a shared
+              system prompt (--shared-prefix tokens) to every request, so
+              the share run's hash-consed admission maps every slot onto
+              ONE copy of those pages (prefix hit rate / peak-page-bytes
+              columns).  --fused adds a third paged run decoding through
+              the fused gather-decode Pallas kernel
+              (repro.kernels.paged_attn) instead of materializing the
+              gathered ring view; on CPU that kernel runs in interpret
+              mode, so its per-iteration time is a correctness figure
+              there and a perf figure only on real TPU backends.
 
 Timing methodology: every engine first replays the SAME trace untimed —
 that pass compiles the decode/chunk jits and every prefill shape the trace
@@ -38,6 +49,7 @@ Run:  PYTHONPATH=src python benchmarks/serve_throughput.py
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -48,11 +60,15 @@ from repro.models.lm import build_model
 from repro.serve.engine import Request, ServeConfig, ServeEngine
 
 
-def make_trace(rng, n, vocab, lo, hi, new_lo, new_hi, long_frac=0.25):
+def make_trace(rng, n, vocab, lo, hi, new_lo, new_hi, long_frac=0.25,
+               shared_prefix=0):
     """Mixed short/long request trace: most requests draw uniform short
     prompts/budgets; a ``long_frac`` tail uses the top of both ranges so
     the static scheduler's bubble, the contiguous pool's stranded ring
-    memory, and whole-wave prefill's TTFT stall all show."""
+    memory, and whole-wave prefill's TTFT stall all show.
+    ``shared_prefix`` prepends one common system prompt to every request
+    (the prefix-sharing workload: N slots, one copy of those pages)."""
+    sys_prompt = rng.integers(0, vocab, (shared_prefix,)).astype(np.int32)
     reqs = []
     for i in range(n):
         if rng.random() < long_frac:
@@ -61,9 +77,9 @@ def make_trace(rng, n, vocab, lo, hi, new_lo, new_hi, long_frac=0.25):
             plen = int(rng.integers(lo, max(lo + 1, hi // 4 + 1)))
             budget = int(rng.integers(new_lo, max(new_lo + 1,
                                                   new_hi // 2 + 1)))
-        reqs.append(Request(
-            rid=i, tokens=rng.integers(0, vocab, (plen,)).astype(np.int32),
-            max_new_tokens=budget))
+        toks = np.concatenate(
+            [sys_prompt, rng.integers(0, vocab, (plen,)).astype(np.int32)])
+        reqs.append(Request(rid=i, tokens=toks, max_new_tokens=budget))
     return reqs
 
 
@@ -135,13 +151,18 @@ def run_continuous(eng: ServeEngine, reqs):
            "tokens_per_s": produced / dt,
            "slot_utilization": report["slot_utilization"],
            "decode_steps": report["decode_steps"],
+           # wall time per engine iteration (one pooled decode step plus
+           # that iteration's admission/chunk work) — NOT isolated
+           # decode-step latency
+           "iter_ms": dt * 1e3 / max(report["decode_steps"], 1),
            "prefill_batches": report["prefill_batches"],
            "prefill_chunks": report["prefill_chunks"],
            "peak_cache_bytes": report["total_bytes"],
            "warmup_s": warmup_s,
            **_ttft_stats(ttft)}
     for k in ("pages_total", "page_utilization", "peak_page_utilization",
-              "page_fragmentation", "preemptions"):
+              "page_fragmentation", "preemptions", "peak_page_bytes",
+              "prefix_hit_rate", "prefix_hits", "cow_copies"):
         if k in report:
             out[k] = report[k]
     return out
@@ -162,6 +183,13 @@ def main(argv=None):
     p.add_argument("--pages-frac", type=float, default=0.5,
                    help="paged arena size as a fraction of the fully "
                         "provisioned slots*max_blocks pool")
+    p.add_argument("--shared-prefix", type=int, default=48,
+                   help="shared system-prompt tokens prepended to every "
+                        "request (0 disables the prefix-sharing workload)")
+    p.add_argument("--fused", action="store_true",
+                   help="add a paged run decoding through the fused "
+                        "gather-decode Pallas kernel (interpret mode off "
+                        "TPU: correctness face, not a CPU perf face)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -170,48 +198,61 @@ def main(argv=None):
         raise SystemExit(f"{args.arch} has no token-only decode face")
     model = build_model(cfg)
     dparams = model.convert(model.init(jax.random.PRNGKey(args.seed)))
-    max_len = args.max_prompt + args.max_new + 8
+    max_len = args.shared_prefix + args.max_prompt + args.max_new + 8
     rng = np.random.default_rng(args.seed)
     reqs = make_trace(rng, args.requests, cfg.vocab_size,
                       args.min_prompt, args.max_prompt,
-                      args.min_new, args.max_new)
+                      args.min_new, args.max_new,
+                      shared_prefix=args.shared_prefix)
 
     max_blocks = -(-max_len // args.page_size)
     num_pages = max(max_blocks,
                     int(args.pages_frac * args.slots * max_blocks))
-    mk = lambda **kw: ServeEngine(model, dparams, ServeConfig(
+    mk = lambda m=model, **kw: ServeEngine(m, dparams, ServeConfig(
         max_len=max_len, num_slots=args.slots, **kw))
+    paged_kw = dict(paged=True, page_size=args.page_size,
+                    max_blocks=max_blocks, num_pages=num_pages)
     print(f"[{cfg.name}] {args.requests} requests x {args.slots} slots; "
-          f"prompts {args.min_prompt}-{args.max_prompt}, "
+          f"prompts {args.min_prompt}-{args.max_prompt} "
+          f"(+{args.shared_prefix} shared system tokens), "
           f"budgets {args.min_new}-{args.max_new} (mixed short/long); "
           f"chunk={args.prefill_chunk}, page_size={args.page_size}, "
           f"arena {num_pages} pages "
           f"(vs {args.slots * max_blocks} fully provisioned)")
-    runs = (("static", run_static(mk(), reqs, args.slots)),
+    runs = [("static", run_static(mk(), reqs, args.slots)),
             ("continuous", run_continuous(mk(), reqs)),
             ("chunked", run_continuous(
                 mk(prefill_chunk=args.prefill_chunk), reqs)),
-            ("paged", run_continuous(mk(paged=True,
-                                        page_size=args.page_size,
-                                        max_blocks=max_blocks,
-                                        num_pages=num_pages), reqs)))
+            ("paged", run_continuous(
+                mk(prefix_share=False, **paged_kw), reqs)),
+            ("paged+share", run_continuous(mk(**paged_kw), reqs))]
+    if args.fused:
+        cfg_k = cfg.with_(binary=dataclasses.replace(cfg.binary,
+                                                     paged_kernel=True))
+        runs.append(("paged+fused", run_continuous(
+            mk(m=build_model(cfg_k), **paged_kw), reqs)))
     for name, r in runs:
         extra = ""
         if "page_utilization" in r:
             ppu = r["peak_page_utilization"] * 100
-            frag = r["page_fragmentation"] * 100
-            extra = (f"  peak-page-util {ppu:4.0f}%  frag {frag:4.1f}%  "
+            hit = r["prefix_hit_rate"] * 100
+            extra = (f"  peak-page-util {ppu:4.0f}%  "
+                     f"peak pages {r['peak_page_bytes'] / 1024:6.1f} KiB  "
+                     f"hit {hit:3.0f}%  cow {r['cow_copies']:.0f}  "
                      f"preempt {r['preemptions']:.0f}")
+        step = f"  iter {r['iter_ms']:6.1f}ms" if "iter_ms" in r else ""
         print(f"  {name:11s} {r['tokens']:5d} tok  {r['seconds']:6.2f}s "
               f"(+{r['warmup_s']:5.2f}s warmup)  "
               f"{r['tokens_per_s']:7.1f} tok/s  "
               f"ttft p50 {r['ttft_p50_s'] * 1e3:7.1f}ms "
               f"p99 {r['ttft_p99_s'] * 1e3:7.1f}ms  "
               f"util {r['slot_utilization'] * 100:5.1f}%  "
-              f"peak cache {r['peak_cache_bytes'] / 1024:8.1f} KiB{extra}")
+              f"peak cache {r['peak_cache_bytes'] / 1024:8.1f} KiB"
+              f"{step}{extra}")
     by_name = {name: r for name, r in runs}
     static, cont = by_name["static"], by_name["continuous"]
     chunked, paged = by_name["chunked"], by_name["paged"]
+    share = by_name["paged+share"]
     speedup = cont["tokens_per_s"] / max(static["tokens_per_s"], 1e-9)
     saving = 1 - paged["peak_cache_bytes"] / max(cont["peak_cache_bytes"], 1)
     ratio = paged["peak_cache_bytes"] / max(cont["peak_cache_bytes"], 1)
@@ -223,6 +264,16 @@ def main(argv=None):
           f"p99 {t99:.2f}x faster, throughput {thr:.2f}x")
     print(f"  paged/continuous peak cache bytes: {ratio:.2f}x "
           f"({saving * 100:.0f}% saved)")
+    pratio = share["peak_page_bytes"] / max(paged["peak_page_bytes"], 1)
+    print(f"  share/paged peak page bytes: {pratio:.2f}x "
+          f"({(1 - pratio) * 100:.0f}% saved; prefix hit rate "
+          f"{share['prefix_hit_rate'] * 100:.0f}%, "
+          f"{share['cow_copies']:.0f} cow copies)")
+    if "paged+fused" in by_name:
+        fused = by_name["paged+fused"]
+        print(f"  fused/gather serve iteration: {fused['iter_ms']:.1f}ms vs "
+              f"{share['iter_ms']:.1f}ms "
+              f"({'interpret-mode CPU — correctness face only' if jax.default_backend() != 'tpu' else 'TPU'})")
     return by_name
 
 

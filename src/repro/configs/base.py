@@ -56,6 +56,11 @@ class BinaryConfig:
     # deploy MoE: dispatch packed activation bits to expert buffers
     # (32-128x smaller dispatch traffic; beyond-paper §Perf optimization)
     moe_dispatch_bits: bool = False
+    # paged decode: fused Pallas gather-decode kernel
+    # (repro.kernels.paged_attn) resolves block tables in-kernel instead
+    # of materializing the gathered ring view; False keeps the gather +
+    # _attend_cache escape hatch (also the kernel's bitwise reference)
+    paged_kernel: bool = False
     # Keep first/last layers (embedding, lm head) full precision (standard
     # practice in BiT/BinaryBERT; embeddings binarized separately).
     binarize_embeddings: bool = False

@@ -1,0 +1,50 @@
+"""Public wrapper for the fused paged gather-decode kernel.
+
+Contract: ``paged_gather_decode(q_bits (B, H, ceil(d_h/32)) uint32,
+k_pages (P+1, Hkv, page_size, ceil(d_h/32)) uint32, vt_pages (P+1, Hkv,
+d_h, page_size/32) uint32, block_table (B, num_blocks) int32, lengths
+(B,) int32, ring_len () int32, theta (B, H) int32)`` returns the
+(B, H, d_h) int32 SPS decode context for one new token per sequence,
+attending over the packed page arena THROUGH the block table: pages are
+resolved in the kernel grid's index map (scalar-prefetched tables), so
+the gathered contiguous ring view of the PR 2 paged decode path is never
+materialized.  Page 0 is the reserved trash page; unmapped table entries
+point at it.  Masking is positional only (``col <= lengths[b]`` and
+``col < ring_len``) — the kernel cannot tell a hole from a mapped page —
+so callers must uphold the engine invariant that a row's mapped pages
+form a prefix covering every position < ``min(lengths[b]+1, ring_len)``.
+Under that invariant trash-page columns are always masked, which is what
+makes the kernel safe to run over free pool slots (zeroed rows, any
+stale length).
+
+Dispatch: real Mosaic lowering on TPU backends, interpret mode elsewhere
+(CPU CI).  ``SPSAttention(paged_kernel=True)`` routes paged decode here;
+``paged_kernel=False`` (the default) is the escape hatch — it keeps the
+gather + ``_attend_cache`` path, which doubles as the bitwise reference
+for this kernel.
+
+Oracle-testing pattern (every ``repro.kernels`` package follows it): the
+fused ``kernel.py`` must match the unfused, unpacked ``ref.py`` oracle
+bit-for-bit, and the oracle in turn mirrors the graph-level path the
+kernel replaces — here ``ref.paged_gather_decode`` materializes the
+gathered view exactly like ``SPSAttention._deploy_decode_paged`` and
+attends with dense integer matmuls.  ``tests/test_paged_kernel.py`` pins
+kernel == ref across page sizes, GQA group counts, ragged lengths and
+SWA rings, and model-level decode with ``paged_kernel=True`` ==
+``paged_kernel=False``; ``tests/test_kernel_differential.py`` fuzzes the
+same equivalences with hypothesis-driven shapes.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attn import kernel as _k
+
+
+def paged_gather_decode(q_bits: jax.Array, k_pages: jax.Array,
+                        vt_pages: jax.Array, block_table: jax.Array,
+                        lengths: jax.Array, ring_len: jax.Array,
+                        theta: jax.Array, *, d_h: int) -> jax.Array:
+    return _k.paged_gather_decode(
+        q_bits, k_pages, vt_pages, block_table, lengths, ring_len, theta,
+        d_h=d_h, interpret=jax.default_backend() != "tpu")

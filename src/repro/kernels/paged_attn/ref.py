@@ -1,0 +1,50 @@
+"""Oracle for the fused paged gather-decode kernel: materialize the
+gathered ring view (exactly what the fused kernel exists to avoid),
+unpack everything, and attend with plain jnp integer arithmetic."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+def gather_ring_view(k_pages: jax.Array, vt_pages: jax.Array,
+                     block_table: jax.Array):
+    """Resolve block tables into the contiguous ring view the unfused
+    decode path builds: k (B, Hkv, nblk*page, dhp) and v^T
+    (B, Hkv, d_h, nblk*page/32).  Logical ring slot s lands at column s."""
+    b, nblk = block_table.shape
+    _, hkv, page, dhp = k_pages.shape
+    dh = vt_pages.shape[2]
+    bt = jnp.clip(block_table, 0, k_pages.shape[0] - 1)
+    kc = jnp.moveaxis(k_pages[bt], 1, 2).reshape(b, hkv, nblk * page, dhp)
+    vc = jnp.moveaxis(vt_pages[bt], 1, 3).reshape(
+        b, hkv, dh, nblk * page // packing.WORD)
+    return kc, vc
+
+
+def paged_gather_decode(q_bits: jax.Array, k_pages: jax.Array,
+                       vt_pages: jax.Array, block_table: jax.Array,
+                       lengths: jax.Array, ring_len, theta: jax.Array, *,
+                       d_h: int) -> jax.Array:
+    """Same contract as ``kernel.paged_gather_decode`` (see ops.py), via
+    gather + unpack + dense integer matmuls.  Bit-for-bit the reference."""
+    b, h, _ = q_bits.shape
+    hkv = k_pages.shape[1]
+    kc, vc = gather_ring_view(k_pages, vt_pages, block_table)
+    wg = kc.shape[2]
+    g = h // hkv
+    q = packing.unpack_signs(q_bits, d_h, jnp.int32)      # (B, H, dh) +-1
+    k = packing.unpack_signs(kc, d_h, jnp.int32)          # (B, Hkv, Wg, dh)
+    k = jnp.repeat(k, g, axis=1)
+    c = jnp.einsum("bhd,bhwd->bhw", q, k)                 # integer scores
+    probs = (c >= theta[:, :, None].astype(jnp.int32)).astype(jnp.int32)
+    cols = jnp.arange(wg)[None, :]
+    valid = (cols <= jnp.asarray(lengths, jnp.int32)[:, None]) & \
+            (cols < jnp.asarray(ring_len, jnp.int32).reshape(-1)[0])
+    probs = probs * valid[:, None, :]
+    # V^T word bit s is ring column s -> unpack along the packed axis
+    v = packing.unpack_signs(vc, wg, jnp.int32)           # (B, Hkv, dh, Wg)
+    v = jnp.repeat(v, g, axis=1)
+    return jnp.einsum("bhw,bhdw->bhd", probs, v)

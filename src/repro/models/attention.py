@@ -36,6 +36,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import binarize, packing, rbmm, sps
+from repro.kernels.paged_attn import ops as paged_attn_ops
 from repro.models import nn
 from repro.models.linear import BinaryDense
 
@@ -210,6 +211,11 @@ class SPSAttention:
     # wo sharding: "row" (all-reduce f32 partials) | "col" (all-gather of
     # packed context bits — 32x less wire)
     wo_partition: str = "row"
+    # paged decode: resolve the block table inside the fused Pallas kernel
+    # (repro.kernels.paged_attn) so the gathered ring view never
+    # materializes; False is the escape hatch — the gather + _attend_cache
+    # path, which doubles as the kernel's bitwise reference
+    paged_kernel: bool = False
 
     # -- construction --------------------------------------------------------
 
@@ -1016,6 +1022,23 @@ class SPSAttention:
         mask_bit = (jnp.uint32(1) << bit)[:, None, None]
         new = (old & ~mask_bit) | (v_bit << bit[:, None, None])
         vp = cache.vt_pages.at[phys, :, :, word_i].set(new)
+        if self.paged_kernel:
+            # fused path: the kernel resolves the block table in its grid
+            # index map and attends over packed pages directly — the
+            # gathered ring view below never materializes
+            theta = self._theta_int(params)
+            if self.sps_granularity == "row":
+                row = jnp.clip(pos, 0, ROW_TABLE - 1)         # (B,)
+                th_b = theta[:, row].T                        # (B, H)
+            else:
+                th_b = jnp.broadcast_to(theta[None, :],
+                                        (b, self.num_heads))
+            ctx_int = paged_attn_ops.paged_gather_decode(
+                q_bits[:, :, 0], kp, vp, cache.block_table, pos,
+                ring, th_b, d_h=dh)
+            out = self._output_deploy(params, ctx_int[:, :, None, :])
+            return out, cache._replace(k_pages=kp, vt_pages=vp,
+                                       length=pos + 1)
         # gather the slot's pages into a contiguous-ring view
         bt = jnp.clip(cache.block_table, 0, kp.shape[0] - 1)  # (B,nblk)
         kc = kp[bt]                                   # (B,nblk,Hkv,page,dhp)

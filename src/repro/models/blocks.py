@@ -45,6 +45,7 @@ def _attn_from_cfg(cfg: ModelConfig, *, cross: bool = False,
         grouped_decode=cfg.decode_grouped_gqa,
         window_chunk=cfg.window_chunking,
         wo_partition="col" if cfg.binary.gather_bits_collectives else "row",
+        paged_kernel=cfg.binary.paged_kernel,
     )
 
 

@@ -23,7 +23,19 @@ requests grow past the old ``max_len`` ring cap (up to ``max_blocks *
 page_size``), and when the arena is exhausted the engine *preempts* the
 lowest-priority slot back to the scheduler queue (recompute-on-resume)
 instead of deadlocking.  Decode stays ONE jit'd pooled step — block-table
-gathers resolve each slot's pages inside it.
+gathers resolve each slot's pages inside it (or the fused
+repro.kernels.paged_attn kernel does, with ``BinaryConfig.paged_kernel``).
+
+``ServeConfig.prefix_share`` (default on, paged mode) adds prefix sharing
+on top: admission hash-conses every full prompt page (chain digests over
+the token prefix that deterministically produces the page's packed K/V^T
+words), so requests opening with the same system prompt ADOPT one shared,
+refcounted copy of those pages instead of allocating their own.  Writes
+that would diverge a shared page copy-on-write behind the other readers'
+backs (the pre-decode sweep), sole-owner divergent writes retire the hash
+key, and pages free only when their last reader leaves — output stays
+token-for-token identical to the unshared paths while peak mapped pages
+drop by the shared-prefix footprint per extra sharer.
 
 With ``ServeConfig.prefill_chunk`` admission becomes *chunked*: prompts
 longer than the chunk occupy a slot as an in-flight prefill and stream
@@ -44,6 +56,7 @@ win, slot occupancy/utilization and page-arena occupancy/fragmentation.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import heapq
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -89,6 +102,14 @@ class ServeConfig:
         slots stay live while long prompts load.  Pure-attention stacks
         only; recurrent families (hybrid/ssm) ignore it and prefill
         whole prompts.
+      prefix_share: paged mode only — admission hash-conses full prompt
+        pages (chain hashes over the token prefix, which deterministically
+        produces the page's bit-packed K/V^T words) so requests with a
+        shared prompt prefix map the SAME physical pages (refcounted).
+        Divergent writes copy-on-write behind the other readers' backs,
+        so output stays token-for-token identical to the unshared paths.
+        False keeps the PR 2 one-owner-per-page behavior (the escape
+        hatch the benchmark compares against).
     """
     max_len: int = 2048
     sampler: str = "greedy"          # greedy | temperature | top_k
@@ -102,6 +123,7 @@ class ServeConfig:
     max_blocks: Optional[int] = None
     num_pages: Optional[int] = None
     prefill_chunk: Optional[int] = None
+    prefix_share: bool = True
 
     def __post_init__(self):
         if self.prefill_chunk is not None and (
@@ -378,23 +400,76 @@ class ServeEngine:
         return [spec.ring_for(w) if kind in ("attn", "hybrid") else None
                 for kind, w in getattr(self.model, "plan", [])]
 
-    def _sync_tables(self, caches, arenas, rings):
+    def _sync_tables(self, caches, arenas, rings, mask_rows: Sequence[int] = ()):
         """Push dirty host-side block tables into the device caches.
 
         Each layer gets its OWN device copy of its arena's table: the
         caches pytree is donated into the jit'd decode step, and donation
-        rejects the same buffer appearing in two leaves."""
-        if not any(a.dirty for a in arenas.values()):
+        rejects the same buffer appearing in two leaves.
+
+        ``mask_rows`` zeroes those slots' rows in the DEVICE copy only
+        (host tables stay authoritative): mid-prefill slots ride through
+        the pooled decode step as garbage rows, and with prefix sharing
+        their one stale write per iteration must land on the trash page
+        instead of a page other readers share.  A masked push leaves the
+        arenas dirty so the next sync restores the real tables."""
+        mask_rows = list(mask_rows)
+        if not (mask_rows or any(a.dirty for a in arenas.values())):
             return caches
         out = []
         for c, ring in zip(caches, rings):
             if ring is not None and isinstance(c.get("attn"), PagedKVCache):
+                tbl = arenas[ring].block_tables
+                if mask_rows:
+                    tbl = tbl.copy()
+                    tbl[mask_rows] = 0
                 c = dict(c)
-                c["attn"] = c["attn"]._replace(
-                    block_table=jnp.asarray(arenas[ring].block_tables))
+                c["attn"] = c["attn"]._replace(block_table=jnp.asarray(tbl))
             out.append(c)
         for a in arenas.values():
-            a.dirty = False
+            a.dirty = bool(mask_rows)
+        return out
+
+    def _page_keys(self, toks: np.ndarray) -> List[bytes]:
+        """Hash-cons keys for the FULL pages of a prompt: key j is a
+        chain digest over tokens[: (j+1) * page_size], i.e. over exactly
+        the prefix that (deterministically, given the params) produces
+        the page's bit-packed K/V^T words.  Equal keys => bitwise-equal
+        page content, so admission can map sharers onto one physical
+        page (``PageArena.set_prefix_keys`` / ``grow``)."""
+        page = self.cfg.page_size
+        h = hashlib.blake2b(digest_size=16)
+        keys: List[bytes] = []
+        toks = np.ascontiguousarray(toks, np.int32)
+        for j in range(len(toks) // page):
+            h.update(toks[j * page:(j + 1) * page].tobytes())
+            keys.append(h.digest())
+        return keys
+
+    @staticmethod
+    def _copy_pages(caches, rings, copies: Dict[int, List[Tuple[int, int]]]):
+        """Apply copy-on-write page payload copies on device: for every
+        layer of each affected ring group, k/vt page ``old`` duplicates
+        into ``new``.  Must run before the next decode/chunk step writes
+        any page (the (old, new) ids are only meaningful against the
+        page contents at sweep time)."""
+        out = []
+        for c, ring in zip(caches, rings):
+            if ring in copies and isinstance(c.get("attn"), PagedKVCache):
+                # dedupe by destination, last writer wins: a COW page can
+                # be freed by a preemption inside the retry loop and
+                # handed to a later COW in the same sweep
+                last = {}
+                for old, new in copies[ring]:
+                    last[new] = old
+                news = jnp.asarray(list(last.keys()), jnp.int32)
+                olds = jnp.asarray(list(last.values()), jnp.int32)
+                pg = c["attn"]
+                c = dict(c)
+                c["attn"] = pg._replace(
+                    k_pages=pg.k_pages.at[news].set(pg.k_pages[olds]),
+                    vt_pages=pg.vt_pages.at[news].set(pg.vt_pages[olds]))
+            out.append(c)
         return out
 
     def serve(self, requests: Sequence[Request], *,
@@ -529,12 +604,25 @@ class ServeEngine:
                 pre = resumed.get(req.rid, [])
                 plen = len(req.tokens) + len(pre)
                 slot = pool.alloc(req.rid)
+                if arenas and self.cfg.prefix_share:
+                    # hash-cons the prompt's full pages so this slot can
+                    # adopt pages an earlier sharer already maps (and
+                    # register the ones it allocates itself); resumed
+                    # tokens extend the chain, so a preempted request
+                    # still re-shares its original prompt prefix
+                    keys = self._page_keys(np.concatenate(
+                        [np.asarray(req.tokens, np.int32),
+                         np.asarray(pre, np.int32)]))
+                    for arena in arenas.values():
+                        arena.set_prefix_keys(slot, keys, plen)
                 if chunk and plen > chunk:
                     # chunk-aware packing: long prompts leave the wave and
                     # stream in as in-flight prefills; reserve only their
                     # FIRST chunk's pages now, the rest grows per chunk
                     if arenas and not all(a.can_grow(slot, chunk)
                                           for a in arenas.values()):
+                        for arena in arenas.values():
+                            arena.release(slot)   # drops the promises
                         pool.release(slot)
                         scheduler.requeue(req)
                         break
@@ -552,6 +640,8 @@ class ServeEngine:
                 # its own first growth step to preempt it straight back
                 if arenas and not all(a.can_grow(slot, plen + 1)
                                       for a in arenas.values()):
+                    for arena in arenas.values():
+                        arena.release(slot)       # drops the promises
                     pool.release(slot)
                     scheduler.requeue(req)   # no pages yet; retry later
                     break
@@ -627,6 +717,7 @@ class ServeEngine:
                 continue
             # -- paged growth: cover the next token; preempt on exhaustion --
             if arenas:
+                copies: Dict[int, List[Tuple[int, int]]] = {}
                 while True:
                     ok = True
                     for slot in sorted(states):
@@ -636,6 +727,30 @@ class ServeEngine:
                             ok = False
                             break
                     if ok:
+                        # copy-on-write sweep: a decode write landing in a
+                        # SHARED page privatizes it first (other readers
+                        # keep the original); a sole-owner write to a
+                        # hash-consed page retires the key instead, so no
+                        # later admission adopts diverged content.  Only
+                        # decoding slots write divergent bits — in-flight
+                        # prefills are masked onto the trash page below.
+                        for ring, a in arenas.items():
+                            for slot in sorted(states):
+                                lp, page = a.write_page(
+                                    slot, states[slot].cache_len)
+                                if page == 0:
+                                    continue
+                                if a.refcount(page) > 1:
+                                    if not a.can_cow():
+                                        ok = False
+                                        break
+                                    copies.setdefault(ring, []).append(
+                                        a.cow(slot, lp))
+                                elif a.page_key(page) is not None:
+                                    a.invalidate_key(page)
+                            if not ok:
+                                break
+                    if ok:
                         break
                     preempt(pick_victim())
                     preemptions += 1
@@ -643,8 +758,19 @@ class ServeEngine:
                         break
                 if not states:
                     continue
+                if copies:
+                    # apply payload copies BEFORE the decode step writes
+                    # anything: the (old, new) ids are snapshots of the
+                    # sweep-time page contents
+                    caches = self._copy_pages(caches, rings, copies)
                 peak()
-                caches = self._sync_tables(caches, arenas, rings)
+                # masking in-flight rows onto the trash page only matters
+                # when pages can be shared — with one-owner pages the
+                # garbage write stays inside the slot's own pages, so the
+                # unshared path keeps PR 3's sync-only-when-dirty behavior
+                mask = sorted(inflight) if self.cfg.prefix_share else ()
+                caches = self._sync_tables(caches, arenas, rings,
+                                           mask_rows=mask)
             # -- one pooled decode step over every slot ---------------------
             # (mid-prefill slots ride along as garbage rows: their one
             # stale write per iteration lands at the position the NEXT
@@ -684,6 +810,19 @@ class ServeEngine:
             report["peak_page_utilization"] = (
                 peak_pages / max(sum(a.num_pages
                                      for a in arenas.values()), 1))
+            # peak bytes of pages actually mapped (per-arena peaks x that
+            # ring group's per-layer page payload) — the figure prefix
+            # sharing moves, since the arena allocation itself is static
+            pb = 0.0
+            for c, ring in zip(caches, rings):
+                if ring is None or not isinstance(c.get("attn"),
+                                                  PagedKVCache):
+                    continue
+                pg = c["attn"]
+                per_page = 4 * (int(np.prod(pg.k_pages.shape[1:])) +
+                                int(np.prod(pg.vt_pages.shape[1:])))
+                pb += arenas[ring].peak_pages * per_page
+            report["peak_page_bytes"] = float(pb)
         return results, report
 
     def _admit(self, caches, reqs: List[Request],

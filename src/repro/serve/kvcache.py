@@ -6,15 +6,17 @@ batch-leading, so a *slot pool* is just those same pytrees with batch ==
 num_slots plus bookkeeping.  This module provides the slot-level operations
 the continuous-batching engine needs — allocate / free / reset, scatter
 freshly-prefilled per-request caches into pool slots, page-arena alloc /
-free / growth bookkeeping (``PageArena``) — and the sizing/occupancy
-reports that surface the paper's deploy-memory story (packed uint32 K/V^T
-caches are 16-32x smaller than bf16 caches, so one edge device holds a much
-deeper slot pool; paging then lets short requests return that memory early
-and long requests grow past any fixed ring).
+free / growth / prefix-sharing bookkeeping (``PageArena``: refcounted
+pages, hash-consed prompt-prefix keys, copy-on-write) — and the
+sizing/occupancy reports that surface the paper's deploy-memory story
+(packed uint32 K/V^T caches are 16-32x smaller than bf16 caches, so one
+edge device holds a much deeper slot pool; paging lets short requests
+return that memory early and long requests grow past any fixed ring;
+sharing collapses N copies of a common system prompt into one).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,10 +77,17 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
       compression_vs_bf16; with slot_lengths also slots_total,
       slots_active, occupancy, mean_slot_len, max_slot_len, decode_steps,
       slot_utilization; with arenas also pages_total, pages_used,
-      pages_free, page_utilization, peak_page_utilization and
+      pages_free, page_utilization, peak_page_utilization,
       page_fragmentation (share of allocated page tokens not backing a
       live token — internal fragmentation of each sequence's last partial
-      page, sampled at peak arena occupancy).
+      page, sampled at peak arena occupancy), pages_reserved (the trash
+      page each arena keeps at id 0 — bookkeeping, counted SEPARATELY:
+      it is excluded from pages_total/pages_used/pages_shared so the
+      share-rate stats stay honest), pages_shared (usable pages mapped
+      by >1 slot right now), prefix_lookups / prefix_hits /
+      prefix_hit_rate (admission prefix pages that consulted the
+      hash-cons table and the fraction adopted instead of allocated) and
+      cow_copies (copy-on-write privatizations).
     """
     total = cache_bytes(caches)
     per_tok = total / max(seq_len * batch, 1)
@@ -118,6 +127,17 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
         report["page_fragmentation"] = (
             sum(a.peak_frag * a.peak_pages * a.page_size for a in arenas)
             / max(peak_alloc, 1))
+        # the reserved trash page (id 0, one per arena) backs every
+        # unmapped block-table entry; it is bookkeeping, not occupancy —
+        # count it separately so it can never read as used or shared
+        report["pages_reserved"] = float(len(arenas))
+        report["pages_shared"] = float(sum(a.shared_pages for a in arenas))
+        lookups = sum(a.prefix_lookups for a in arenas)
+        hits = sum(a.share_hits for a in arenas)
+        report["prefix_lookups"] = float(lookups)
+        report["prefix_hits"] = float(hits)
+        report["prefix_hit_rate"] = hits / max(lookups, 1)
+        report["cow_copies"] = float(sum(a.cow_copies for a in arenas))
     return report
 
 
@@ -275,13 +295,28 @@ def slot_lengths(caches: Caches) -> np.ndarray:
 
 
 class PageArena:
-    """Free-list bookkeeping for one ring group's page arena.
+    """Refcounted free-list bookkeeping for one ring group's page arena.
 
     Layers that share a logical ring length (e.g. every full-attention
     layer, or every window-W layer) allocate in lockstep, so ONE arena's
     block tables mirror into each of the group's per-layer
     ``PagedKVCache.block_table`` arrays.  Physical page ids are 1..
-    ``num_pages``; id 0 is the trash page every layer reserves.
+    ``num_pages``; id 0 is the trash page every layer reserves — it is
+    pure bookkeeping, never refcounted, and reported separately from the
+    usable-page stats (``pages_reserved`` in ``cache_report``).
+
+    Prefix sharing: pages carry refcounts and a hash-cons table from
+    *page keys* (chain hashes over the bit-packed page content — in
+    practice the token prefix that deterministically produces those K/V^T
+    words) to physical pages.  ``set_prefix_keys`` records a slot's
+    admission-time keys; ``grow`` then adopts an existing page (refcount
+    +1) instead of allocating whenever a key already maps one, and
+    registers freshly allocated prefix pages for future sharers.  A write
+    that would diverge a shared page must go through ``cow`` first
+    (copy-on-write: the writer gets a private page, other readers keep
+    the original); a divergent write by a sole owner instead
+    ``invalidate_key``s the page so no future sharer adopts stale
+    content.  ``release`` only frees a page when its LAST reader leaves.
 
     The jax-side page arrays are owned by the engine (they flow through the
     jit'd decode step with donation); this object only tracks which pages
@@ -304,6 +339,15 @@ class PageArena:
         self.block_tables = np.zeros((num_slots, num_blocks), np.int32)
         self._counts = np.zeros((num_slots,), np.int64)
         self._lengths = np.zeros((num_slots,), np.int64)
+        # prefix sharing: per-page refcounts (index 0 = trash, always 0),
+        # hash-cons table both ways, and per-slot admission-time promises
+        self._ref = np.zeros((num_pages + 1,), np.int64)
+        self._key_page: Dict[bytes, int] = {}
+        self._page_key: Dict[int, bytes] = {}
+        self._promises: Dict[int, List[bytes]] = {}
+        self.share_hits = 0        # pages adopted instead of allocated
+        self.prefix_lookups = 0    # prefix pages that tried the table
+        self.cow_copies = 0        # copy-on-write privatizations
         self.peak_pages = 0
         self.peak_frag = 0.0       # internal fragmentation at peak occupancy
         self.dirty = True          # device tables not yet synced
@@ -328,48 +372,151 @@ class PageArena:
         """Ring-capped live tokens actually backing allocated pages."""
         return int(np.minimum(self._lengths, self.ring_len).sum())
 
+    @property
+    def shared_pages(self) -> int:
+        """Usable pages currently mapped by more than one slot.  The trash
+        page 0 backs every unmapped table entry but is never refcounted,
+        so it can never masquerade as a shared page here."""
+        return int((self._ref > 1).sum())
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def page_key(self, page: int) -> Optional[bytes]:
+        """The hash-cons key registered for ``page`` (None if none)."""
+        return self._page_key.get(page)
+
     def blocks_for(self, length: int) -> int:
         """Logical pages needed to hold ``length`` tokens (ring-capped)."""
         return -(-min(length, self.ring_len) // self.page_size)
 
+    def set_prefix_keys(self, slot: int, keys: Sequence[bytes],
+                        prompt_len: int) -> None:
+        """Record ``slot``'s admission-time prefix page keys.
+
+        Only FULL pages of the prompt are shareable, and only when the
+        whole prompt fits the logical ring (``prompt_len <= ring_len``) —
+        a wrapped prefill ring holds later tokens at early ring slots, so
+        its page content is no longer the pure token prefix the key
+        promises.  ``grow`` consults these promises page by page: a key
+        already in the table is adopted (refcount +1, no allocation); a
+        fresh allocation under a promise registers the key for future
+        sharers."""
+        if prompt_len <= self.ring_len:
+            n = min(len(keys), prompt_len // self.page_size)
+            self._promises[slot] = list(keys[:n])
+        else:
+            self._promises[slot] = []
+
+    def _prefix_hits(self, slot: int, have: int, need: int) -> int:
+        keys = self._promises.get(slot, ())
+        return sum(1 for lp in range(have, min(need, len(keys)))
+                   if keys[lp] in self._key_page)
+
     def can_grow(self, slot: int, length: int) -> bool:
-        return (self.blocks_for(length) - int(self._counts[slot])
+        need = self.blocks_for(length)
+        have = int(self._counts[slot])
+        return (need - have - self._prefix_hits(slot, have, need)
                 <= len(self._free))
 
     # -- alloc / free ------------------------------------------------------
 
-    def grow(self, slot: int, length: int) -> bool:
-        """Ensure ``slot`` owns pages covering ``length`` tokens.
+    def _note_peak(self) -> None:
+        if self.used_pages >= self.peak_pages:
+            self.peak_pages = self.used_pages
+            self.peak_frag = 1 - (self.live_tokens /
+                                  max(self.allocated_tokens, 1))
 
-        Returns False (allocating nothing) when the arena cannot satisfy
-        the growth — the engine then preempts a victim and retries."""
+    def grow(self, slot: int, length: int) -> bool:
+        """Ensure ``slot`` maps pages covering ``length`` tokens.
+
+        New logical pages under an admission promise whose key is already
+        hash-consed ADOPT the existing physical page (refcount +1) instead
+        of allocating; fresh allocations under a promise register their
+        key.  Returns False (mapping nothing) when the arena cannot
+        satisfy the growth — the engine then preempts a victim and
+        retries."""
         need = self.blocks_for(length)
         have = int(self._counts[slot])
-        if need - have > len(self._free):
+        if not self.can_grow(slot, length):
             return False
+        keys = self._promises.get(slot, ())
         for lp in range(have, need):
-            self.block_tables[slot, lp] = self._free.pop()
+            key = keys[lp] if lp < len(keys) else None
+            page = self._key_page.get(key) if key is not None else None
+            if key is not None:
+                self.prefix_lookups += 1
+            if page is not None:
+                self._ref[page] += 1
+                self.share_hits += 1
+            else:
+                page = self._free.pop()
+                self._ref[page] = 1
+                if key is not None:
+                    self._key_page[key] = page
+                    self._page_key[page] = key
+            self.block_tables[slot, lp] = page
         self._lengths[slot] = max(int(self._lengths[slot]), length)
         if need > have:
             self._counts[slot] = need
             self.dirty = True
-            if self.used_pages >= self.peak_pages:
-                self.peak_pages = self.used_pages
-                self.peak_frag = 1 - (self.live_tokens /
-                                      max(self.allocated_tokens, 1))
+            self._note_peak()
         return True
 
     def release(self, slot: int) -> None:
-        """Return every page owned by ``slot`` to the free list and unmap
-        its block-table row (retirement or preemption)."""
+        """Drop ``slot``'s reference on every page it maps and unmap its
+        block-table row (retirement or preemption).  A page returns to
+        the free list — and its hash-cons key retires — only when the
+        LAST reader leaves."""
         n = int(self._counts[slot])
         for lp in range(n):
-            self._free.append(int(self.block_tables[slot, lp]))
+            page = int(self.block_tables[slot, lp])
+            self._ref[page] -= 1
+            if self._ref[page] == 0:
+                self._free.append(page)
+                self.invalidate_key(page)
         if n:
             self.block_tables[slot, :n] = 0
             self.dirty = True
         self._counts[slot] = 0
         self._lengths[slot] = 0
+        self._promises.pop(slot, None)
+
+    # -- copy-on-write -----------------------------------------------------
+
+    def write_page(self, slot: int, pos: int) -> Tuple[int, int]:
+        """(logical page, physical page) the decode write at token
+        position ``pos`` will land in (ring arithmetic included)."""
+        lp = (pos % self.ring_len) // self.page_size
+        return lp, int(self.block_tables[slot, lp])
+
+    def can_cow(self) -> bool:
+        return bool(self._free)
+
+    def cow(self, slot: int, lp: int) -> Tuple[int, int]:
+        """Privatize ``slot``'s logical page ``lp`` before a divergent
+        write: allocate a fresh page, move the slot's reference onto it
+        and return ``(old, new)`` physical ids so the engine can copy the
+        page payload on device.  Other readers keep the original page —
+        COW is never visible to them.  Caller checks ``can_cow`` first
+        (exhaustion preempts, exactly like ``grow``)."""
+        old = int(self.block_tables[slot, lp])
+        new = self._free.pop()
+        self._ref[old] -= 1
+        self._ref[new] = 1
+        self.block_tables[slot, lp] = new
+        self.cow_copies += 1
+        self.dirty = True
+        self._note_peak()
+        return old, new
+
+    def invalidate_key(self, page: int) -> None:
+        """Retire ``page``'s hash-cons key (sole-owner divergent write, or
+        last-reader release): future admissions must not adopt content
+        that no longer matches the key's promise."""
+        key = self._page_key.pop(page, None)
+        if key is not None:
+            self._key_page.pop(key, None)
 
 
 class SlotPool:

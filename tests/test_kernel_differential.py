@@ -1,0 +1,235 @@
+"""Differential fuzzing of every Pallas kernel package against its oracle.
+
+Each ``repro.kernels.<name>`` package ships ``kernel.py`` (the Pallas
+implementation, interpret mode on CPU) and ``ref.py`` (the pure-jnp
+oracle it must match bit-for-bit).  ``tests/test_kernels.py`` pins a
+handful of curated shapes; this file is the hypothesis-driven sweep: for
+every kernel, randomized operand shapes — explicitly including
+non-multiple-of-block edge shapes so the padding/masking epilogues get
+exercised — randomized block sizes, and bitwise comparison against the
+oracle (all outputs are integers or integer-valued floats, so equality
+is exact, never allclose).
+
+The quick smoke variants run in tier-1; the wide sweeps are marked
+``slow`` and run in the dedicated CI kernel-differential job
+(``.github/workflows/ci.yml``) with ``JAX_PLATFORMS=cpu`` and hypothesis
+deadlines disabled (every ``@settings`` below sets ``deadline=None``).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import packing
+from repro.kernels.pack import ops as pack_ops, ref as pack_ref
+from repro.kernels.paged_attn import ops as pa_ops, ref as pa_ref
+from repro.kernels.rbmm import ops as rbmm_ops, ref as rbmm_ref
+from repro.kernels.rbmm_mxu import ops as mxu_ops, ref as mxu_ref
+from repro.kernels.sps_attn import ops as sa_ops, ref as sa_ref
+
+
+# ---------------------------------------------------------------------------
+# rbmm — integer scores and the quantization-fused binary epilogue
+# ---------------------------------------------------------------------------
+
+
+def _rbmm_case(rng, m, k, p, scheme):
+    b = rng.choice([-1, 1], size=(p, k)).astype(np.int32)
+    bp = packing.pack_bits(jnp.asarray((b > 0).astype(np.uint32)))
+    if scheme == "xnor":
+        a = rng.choice([-1, 1], size=(m, k)).astype(np.int32)
+        ap = packing.pack_bits(jnp.asarray((a > 0).astype(np.uint32)))
+    else:
+        a = rng.integers(0, 2, size=(m, k)).astype(np.int32)
+        ap = packing.pack_bits(jnp.asarray(a.astype(np.uint32)))
+    return a, b, ap, bp
+
+
+@given(st.integers(1, 70), st.integers(1, 130), st.integers(1, 70),
+       st.sampled_from(["xnor", "and_dc"]), st.integers(3, 40),
+       st.integers(3, 40), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+@pytest.mark.slow
+def test_rbmm_int_fuzz(m, k, p, scheme, bm, bn, seed):
+    """Random (M, K, P) — K deliberately spanning non-multiples of the
+    32-bit word — and block sizes that don't divide M/P."""
+    rng = np.random.default_rng(seed)
+    a, b, ap, bp = _rbmm_case(rng, m, k, p, scheme)
+    got = rbmm_ops.rbmm_int(ap, bp, k, scheme=scheme, bm=bm, bn=bn)
+    ref = rbmm_ref.rbmm_int(ap, bp, k, scheme=scheme)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(ref), a @ b.T)
+
+
+@given(st.integers(1, 50), st.integers(1, 96), st.integers(1, 50),
+       st.sampled_from(["xnor", "and_dc"]), st.booleans(),
+       st.integers(3, 24), st.integers(3, 24), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+@pytest.mark.slow
+def test_rbmm_binary_fuzz(m, k, p, scheme, causal, bm, bn, seed):
+    rng = np.random.default_rng(seed)
+    _, _, ap, bp = _rbmm_case(rng, m, k, p, scheme)
+    theta = jnp.asarray(rng.integers(-6, 6, size=(p,)).astype(np.int32))
+    got, got_dc = rbmm_ops.rbmm_binary(ap, bp, k, theta, scheme=scheme,
+                                       causal=causal, bm=bm, bn=bn)
+    ref, ref_dc = rbmm_ref.rbmm_binary(ap, bp, k, theta, scheme=scheme,
+                                       causal=causal)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(got_dc), np.asarray(ref_dc))
+
+
+def test_rbmm_int_edge_shapes_smoke():
+    """Tier-1 smoke of the worst edge shapes (1-sized dims, K % 32 != 0,
+    blocks larger than the matrix)."""
+    rng = np.random.default_rng(0)
+    for m, k, p, bm, bn in [(1, 1, 1, 7, 7), (2, 33, 3, 64, 64),
+                            (33, 95, 17, 5, 11)]:
+        a, b, ap, bp = _rbmm_case(rng, m, k, p, "xnor")
+        got = rbmm_ops.rbmm_int(ap, bp, k, bm=bm, bn=bn)
+        np.testing.assert_array_equal(np.asarray(got), a @ b.T)
+
+
+# ---------------------------------------------------------------------------
+# rbmm_mxu — packed-weight MXU matmul
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 40), st.integers(32, 160), st.integers(1, 40),
+       st.booleans(), st.integers(3, 24), st.integers(3, 24),
+       st.integers(1, 4), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+@pytest.mark.slow
+def test_rbmm_mxu_fuzz(m, k, p, unsigned, bm, bn, bkw, seed):
+    """±1 and {0,1} activations; K spans non-word-multiples but bk obeys
+    the kernel contract (a word multiple <= K after clamping) while
+    bm/bn stay free to not divide M/P.  Integer-valued f32 => exact."""
+    bk = packing.WORD * max(1, min(bkw, k // packing.WORD))
+    rng = np.random.default_rng(seed)
+    if unsigned:
+        a = rng.integers(0, 2, size=(m, k)).astype(np.float32)
+    else:
+        a = rng.choice([-1.0, 1.0], size=(m, k)).astype(np.float32)
+    w = rng.choice([-1, 1], size=(p, k)).astype(np.int32)
+    wp = packing.pack_signs(jnp.asarray(w))
+    got = mxu_ops.rbmm_mxu(jnp.asarray(a), wp, bm=bm, bn=bn, bk=bk)
+    ref = mxu_ref.rbmm_mxu(jnp.asarray(a), wp)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(ref), a @ w.T.astype(np.float32))
+
+
+def test_rbmm_mxu_edge_shapes_smoke():
+    rng = np.random.default_rng(1)
+    for m, k, p in [(1, 32, 1), (3, 65, 5), (17, 33, 2)]:
+        a = rng.choice([-1.0, 1.0], size=(m, k)).astype(np.float32)
+        w = rng.choice([-1, 1], size=(p, k)).astype(np.int32)
+        wp = packing.pack_signs(jnp.asarray(w))
+        got = mxu_ops.rbmm_mxu(jnp.asarray(a), wp, bm=8, bn=8, bk=32)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      a @ w.T.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sps_attn — fused softmax-free attention
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 4), st.integers(1, 150), st.sampled_from([32, 64, 96]),
+       st.sampled_from(["vpu", "mxu"]), st.booleans(),
+       st.sampled_from([32, 64, 96]), st.sampled_from([32, 64, 96]),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+@pytest.mark.slow
+def test_sps_attn_fuzz(h, l, dh, path, causal, bq, bk, seed):
+    """Sequence lengths spanning non-multiples of every block size."""
+    rng = np.random.default_rng(seed)
+    qv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
+    kv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
+    vv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
+    qb = packing.pack_signs(jnp.asarray(qv))
+    kb = packing.pack_signs(jnp.asarray(kv))
+    theta = jnp.asarray(rng.integers(-6, 6, size=(h,)).astype(np.int32))
+    want = sa_ref.sps_attention(qb, kb, jnp.asarray(vv), theta, d_h=dh,
+                                causal=causal)
+    v_in = (sa_ref.v_transpose_packed(jnp.asarray(vv)) if path == "vpu"
+            else jnp.asarray(vv, jnp.bfloat16))
+    got = sa_ops.sps_attention(qb, kb, v_in, theta, d_h=dh, causal=causal,
+                               path=path, bq=bq, bk=bk)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sps_attn_edge_shapes_smoke():
+    rng = np.random.default_rng(2)
+    for h, l in [(1, 1), (2, 33), (3, 97)]:
+        qv = rng.choice([-1, 1], size=(h, l, 32)).astype(np.int32)
+        kv = rng.choice([-1, 1], size=(h, l, 32)).astype(np.int32)
+        vv = rng.choice([-1, 1], size=(h, l, 32)).astype(np.int32)
+        qb, kb = (packing.pack_signs(jnp.asarray(qv)),
+                  packing.pack_signs(jnp.asarray(kv)))
+        theta = jnp.zeros((h,), jnp.int32)
+        want = sa_ref.sps_attention(qb, kb, jnp.asarray(vv), theta, d_h=32)
+        got = sa_ops.sps_attention(qb, kb,
+                                   sa_ref.v_transpose_packed(jnp.asarray(vv)),
+                                   theta, d_h=32, bq=32, bk=32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# pack — threshold-binarize + bit-pack conversion unit
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 80), st.integers(1, 400), st.booleans(),
+       st.integers(3, 40), st.integers(1, 4), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+@pytest.mark.slow
+def test_pack_fuzz(m, k, ints, bm, bw, seed):
+    """Float and int inputs, K far from word/block multiples."""
+    rng = np.random.default_rng(seed)
+    if ints:
+        x = rng.integers(-50, 50, size=(m, k)).astype(np.int32)
+        theta = rng.integers(-50, 50, size=(k,)).astype(np.int32)
+    else:
+        x = rng.normal(size=(m, k)).astype(np.float32)
+        theta = rng.normal(size=(k,)).astype(np.float32)
+    got = pack_ops.pack_threshold(jnp.asarray(x), jnp.asarray(theta),
+                                  bm=bm, bw=bw)
+    want = pack_ref.pack_threshold(jnp.asarray(x), jnp.asarray(theta))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# paged_attn — fused paged gather-decode (PR 4)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3),
+       st.sampled_from([32, 64]), st.sampled_from([32, 64]),
+       st.integers(1, 4), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+@pytest.mark.slow
+def test_paged_gather_decode_fuzz(b, hkv, groups, dh, page, nblk, seed):
+    """Random arenas: trash-page entries, ragged lengths past the ring,
+    SWA rings shorter than the table capacity."""
+    rng = np.random.default_rng(seed)
+    h = hkv * groups
+    pages = int(rng.integers(nblk, nblk + 4))
+    ring = int(rng.choice([nblk * page, max(page, nblk * page - 16)]))
+    dhp = packing.packed_len(dh)
+    u32 = lambda shape: jnp.asarray(
+        rng.integers(0, 2**32, shape, dtype=np.uint64).astype(np.uint32))
+    kp = u32((pages + 1, hkv, page, dhp))
+    vt = u32((pages + 1, hkv, dh, page // packing.WORD))
+    q = u32((b, h, dhp))
+    bt = jnp.asarray(rng.integers(0, pages + 1, (b, nblk),
+                                  dtype=np.int64).astype(np.int32))
+    lens = jnp.asarray(rng.integers(0, ring + 20, (b,),
+                                    dtype=np.int64).astype(np.int32))
+    th = jnp.asarray(rng.integers(-12, 12, (b, h),
+                                  dtype=np.int64).astype(np.int32))
+    got = pa_ops.paged_gather_decode(q, kp, vt, bt, lens, jnp.int32(ring),
+                                     th, d_h=dh)
+    want = pa_ref.paged_gather_decode(q, kp, vt, bt, lens, jnp.int32(ring),
+                                      th, d_h=dh)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

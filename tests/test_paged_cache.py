@@ -253,9 +253,14 @@ def test_paged_cache_report_keys(smollm):
         max_len=64, num_slots=2, paged=True, page_size=32,
         num_pages=3)).generate(prompts, max_new_tokens=2)
     for k in ("pages_total", "pages_used", "pages_free", "page_utilization",
-              "peak_page_utilization", "page_fragmentation", "preemptions"):
+              "peak_page_utilization", "page_fragmentation", "preemptions",
+              "pages_reserved", "pages_shared", "prefix_lookups",
+              "prefix_hits", "prefix_hit_rate", "cow_copies",
+              "peak_page_bytes"):
         assert k in report, k
     assert report["pages_total"] >= 3.0
+    assert report["pages_reserved"] >= 1.0      # trash page, counted apart
+    assert report["peak_page_bytes"] > 0.0
     assert 0.0 < report["peak_page_utilization"] <= 1.0
     assert 0.0 <= report["page_fragmentation"] <= 1.0
     # everything retired -> all pages back on the free list

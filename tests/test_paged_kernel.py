@@ -1,0 +1,170 @@
+"""Fused paged gather-decode kernel: bitwise equivalence pins.
+
+Three layers of differential coverage, all in Pallas interpret mode (the
+CPU CI face of the kernel):
+
+* kernel vs the unfused ``ref.py`` oracle over a grid of page sizes, GQA
+  group counts, SWA rings and ragged lengths (including empty and
+  wrapped sequences, and unmapped trash-page table entries);
+* ``SPSAttention._deploy_decode_paged`` with ``paged_kernel=True`` vs the
+  ``paged_kernel=False`` escape hatch (the gather + ``_attend_cache``
+  reference) — identical f32 outputs AND identical updated cache bits,
+  across threshold granularities;
+* model-level serving: a ``paged_kernel=True`` model must generate
+  token-for-token what contiguous rings and the gather path generate,
+  across dense / MoE / SWA smoke archs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.core import packing
+from repro.kernels.paged_attn import kernel as pk
+from repro.kernels.paged_attn import ops as pops
+from repro.kernels.paged_attn import ref as pref
+from repro.models.attention import SPSAttention
+from repro.models.lm import build_model
+from repro.serve.engine import ServeConfig, ServeEngine
+
+
+def _rand_pages(rng, b, h, hkv, dh, page, nblk, pages, ring):
+    dhp = packing.packed_len(dh)
+    u32 = lambda shape: jnp.asarray(
+        rng.integers(0, 2**32, shape, dtype=np.uint64).astype(np.uint32))
+    kp = u32((pages + 1, hkv, page, dhp))
+    vt = u32((pages + 1, hkv, dh, page // packing.WORD))
+    q = u32((b, h, dhp))
+    # include unmapped (0 = trash) entries — they must always mask out
+    bt = jnp.asarray(rng.integers(0, pages + 1, (b, nblk),
+                                  dtype=np.int64).astype(np.int32))
+    lens = jnp.asarray(rng.integers(0, ring + 20, (b,),
+                                    dtype=np.int64).astype(np.int32))
+    lens = lens.at[0].set(0)              # empty sequence edge
+    th = jnp.asarray(rng.integers(-12, 12, (b, h),
+                                  dtype=np.int64).astype(np.int32))
+    return q, kp, vt, bt, lens, th
+
+
+@pytest.mark.parametrize("b,h,hkv,dh,page,nblk,pages,ring", [
+    (2, 4, 2, 32, 32, 3, 5, 96),          # GQA, full ring
+    (3, 3, 1, 64, 64, 2, 4, 128),         # 1 kv head, bigger page
+    (2, 2, 2, 32, 32, 2, 3, 48),          # SWA ring < nblk * page
+    (1, 6, 3, 32, 64, 2, 5, 128),         # odd group count
+    (2, 4, 4, 32, 32, 1, 2, 32),          # MHA, single block
+])
+def test_kernel_matches_ref_bitwise(b, h, hkv, dh, page, nblk, pages, ring):
+    rng = np.random.default_rng(b * 1000 + h * 100 + page)
+    q, kp, vt, bt, lens, th = _rand_pages(rng, b, h, hkv, dh, page, nblk,
+                                          pages, ring)
+    out_k = pk.paged_gather_decode(q, kp, vt, bt, lens, jnp.int32(ring),
+                                   th, d_h=dh, interpret=True)
+    out_r = pref.paged_gather_decode(q, kp, vt, bt, lens, jnp.int32(ring),
+                                     th, d_h=dh)
+    assert out_k.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_ops_dispatch_interprets_off_tpu():
+    rng = np.random.default_rng(0)
+    q, kp, vt, bt, lens, th = _rand_pages(rng, 2, 2, 1, 32, 32, 2, 3, 64)
+    out = pops.paged_gather_decode(q, kp, vt, bt, lens, jnp.int32(64), th,
+                                   d_h=32)
+    ref = pref.paged_gather_decode(q, kp, vt, bt, lens, jnp.int32(64), th,
+                                   d_h=32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("granularity", ["layer", "head", "row"])
+def test_fused_decode_matches_attend_cache_escape_hatch(granularity):
+    """The module-level pin: one paged decode step with paged_kernel=True
+    must be bitwise equal (outputs and cache) to paged_kernel=False —
+    the gather + _attend_cache path IS the kernel's reference."""
+    b, hkv, dh, page, nblk, pages = 3, 2, 32, 32, 3, 5
+    mk = lambda fused: SPSAttention(
+        d_model=128, num_heads=4, num_kv_heads=hkv, head_dim=dh,
+        sps_granularity=granularity, paged_kernel=fused)
+    attn = mk(False)
+    params = attn.convert(attn.init(jax.random.PRNGKey(0)))
+    cache = attn.init_paged_cache(b, ring_len=nblk * page, page_size=page,
+                                  num_blocks=nblk, num_pages=pages)
+    rng = np.random.default_rng(5)
+    # map pages and pretend some tokens were written (random payloads are
+    # fine: both paths read the same cache)
+    bt = np.zeros((b, nblk), np.int32)
+    bt[0, :2] = [1, 2]
+    bt[1, :1] = [3]
+    bt[2, :3] = [4, 5, 1]                 # aliased page: read-only here
+    u32 = lambda shape: jnp.asarray(
+        rng.integers(0, 2**32, shape, dtype=np.uint64).astype(np.uint32))
+    cache = cache._replace(
+        k_pages=u32(cache.k_pages.shape),
+        vt_pages=u32(cache.vt_pages.shape),
+        block_table=jnp.asarray(bt),
+        length=jnp.asarray([40, 7, 0], jnp.int32))
+    x = jnp.asarray(rng.normal(size=(b, 1, 128)), jnp.float32)
+    out_g, cache_g = attn.deploy_decode(params, x, cache)
+    out_f, cache_f = mk(True).deploy_decode(params, x, cache)
+    np.testing.assert_array_equal(np.asarray(out_g), np.asarray(out_f))
+    for a, c in zip(cache_g, cache_f):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+@pytest.mark.parametrize("arch,over", [
+    ("smollm-135m", {}),
+    ("mixtral-8x22b", {}),                # MoE + sliding window 16
+    ("gemma3-27b", {}),                   # 5:1 local:global interleave
+], ids=["dense", "moe", "swa"])
+def test_paged_kernel_serve_token_identical(arch, over):
+    """Serving with the fused kernel == contiguous rings == gather paged
+    path, token for token (ragged prompts, growth, retirement)."""
+    cfg = base.get_smoke_config(arch)
+    if over:
+        cfg = cfg.with_(**over)
+    model = build_model(cfg)
+    dparams = model.convert(model.init(jax.random.PRNGKey(0)))
+    cfg_k = cfg.with_(binary=dataclasses.replace(cfg.binary,
+                                                 paged_kernel=True))
+    model_k = build_model(cfg_k)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (4, 7, 5)]
+    cont, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=64, num_slots=2)).generate(prompts, max_new_tokens=3)
+    gather, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=64, num_slots=2, paged=True)).generate(
+            prompts, max_new_tokens=3)
+    fused, _ = ServeEngine(model_k, dparams, ServeConfig(
+        max_len=64, num_slots=2, paged=True)).generate(
+            prompts, max_new_tokens=3)
+    for i, (a, b, c) in enumerate(zip(cont, gather, fused)):
+        np.testing.assert_array_equal(a, b, err_msg=f"gather rid {i}")
+        np.testing.assert_array_equal(a, c, err_msg=f"fused rid {i}")
+
+
+@pytest.mark.slow
+def test_paged_kernel_serve_with_sharing_and_chunking():
+    """Fused kernel composed with prefix sharing + chunked prefill: the
+    full PR 4 stack against the plain contiguous oracle."""
+    cfg = base.get_smoke_config("smollm-135m")
+    cfg_k = cfg.with_(binary=dataclasses.replace(cfg.binary,
+                                                 paged_kernel=True))
+    model = build_model(cfg)
+    model_k = build_model(cfg_k)
+    dparams = model.convert(model.init(jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(11)
+    sys_p = rng.integers(0, cfg.vocab_size, (48,)).astype(np.int32)
+    prompts = [np.concatenate([sys_p, rng.integers(
+        0, cfg.vocab_size, (n,)).astype(np.int32)]) for n in (6, 2, 9)]
+    cont, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=128, num_slots=2)).generate(prompts, max_new_tokens=5)
+    fused, report = ServeEngine(model_k, dparams, ServeConfig(
+        max_len=128, num_slots=2, paged=True,
+        prefill_chunk=32)).generate(prompts, max_new_tokens=5)
+    for a, b in zip(cont, fused):
+        np.testing.assert_array_equal(a, b)
+    assert report["prefix_hits"] >= 1.0

@@ -89,6 +89,44 @@ def test_scheduler_seeded_construction_matches(seed):
     assert order_a == order_b
 
 
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+@settings(max_examples=60, deadline=None)
+def test_requeue_resumes_at_head_of_priority_class(seed, n_prios):
+    """Direct per-class invariant (not just oracle agreement): under any
+    interleaving of add / requeue / pop, a preempted request resumes at
+    the HEAD of its priority class — before every queued peer of the same
+    priority, later requeues before earlier ones — while classes
+    themselves still pop highest-priority-first.  Modelled as one deque
+    per class: add appends, requeue appendleft, pop reads the highest
+    nonempty class's left end."""
+    rng = np.random.default_rng(seed)
+    sched = Scheduler()
+    classes = {p: collections.deque() for p in range(n_prios)}
+    popped = []
+    next_rid = 0
+    for _ in range(80):
+        op = rng.random()
+        if op < 0.4 or (not any(classes.values()) and not popped):
+            r = _req(next_rid, int(rng.integers(0, n_prios)))
+            next_rid += 1
+            sched.add(r)
+            classes[r.priority].append(r.rid)
+        elif op < 0.6 and popped:
+            r = popped.pop(int(rng.integers(len(popped))))
+            sched.requeue(r)
+            classes[r.priority].appendleft(r.rid)
+        elif any(classes.values()):
+            top = max(p for p, q in classes.items() if q)
+            want = classes[top].popleft()
+            got = sched.pop()
+            assert got.rid == want, (got.rid, want, top)
+            popped.append(got)
+        assert len(sched) == sum(len(q) for q in classes.values())
+    while any(classes.values()):
+        top = max(p for p, q in classes.items() if q)
+        assert sched.pop().rid == classes[top].popleft()
+
+
 def test_scheduler_fifo_within_class_and_requeue_front():
     s = Scheduler([_req(i, p) for i, p in enumerate([0, 2, 1, 2, 0])])
     assert [s.pop().rid for _ in range(5)] == [1, 3, 2, 0, 4]
