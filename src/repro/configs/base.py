@@ -134,6 +134,17 @@ class ModelConfig:
     def with_(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)
 
+    def truncated(self, num_layers: int) -> "ModelConfig":
+        """First-``num_layers``-prefix of this config — the shape of a
+        layer-truncated self-speculative draft.  The per-layer plan
+        (window interleaving, MoE placement) is index-deterministic, so
+        a truncated config's layers are exactly the prefix of the full
+        stack's and can share its (packed) weights."""
+        if not 1 <= num_layers <= self.num_layers:
+            raise ValueError(
+                f"truncated({num_layers}) outside [1, {self.num_layers}]")
+        return self.with_(num_layers=num_layers)
+
     def param_count(self) -> int:
         """Analytic parameter count (embeddings included once)."""
         d, ff, hd = self.d_model, self.d_ff, self.resolved_head_dim

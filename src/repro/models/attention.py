@@ -749,7 +749,6 @@ class SPSAttention:
             raise ValueError("chunked prefill is causal self-attention "
                              "only (cross-attention memory is static)")
         b, c_len, _ = x.shape
-        hkv, dh = self.num_kv_heads, self.head_dim
         if start is None:
             start = cache.length
         start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
@@ -760,37 +759,62 @@ class SPSAttention:
                                      (b,))
         positions = start[:, None] + jnp.arange(c_len)[None, :]
         q_bits, k_bits, s_v = self._project_qkv_deploy(params, x, positions)
+        kc_old, vc_old, ring = self._cache_ring_view(cache)
+        ctx_int = self._chunk_attend(params, q_bits, k_bits, s_v, kc_old,
+                                     vc_old, start, valid, positions, ring,
+                                     window)
+        out = self._output_deploy(params, ctx_int)
+        return out, self._write_chunk(cache, k_bits, s_v, start, valid)
+
+    def _cache_ring_view(self, cache) -> Tuple[Array, Array, Any]:
+        """(kc, vc, ring) packed K / V^T ring view of a decode cache —
+        the contiguous arrays themselves, or the block-table gather of a
+        ``PagedKVCache`` laid out so logical ring slot s is column s."""
+        if not isinstance(cache, PagedKVCache):
+            return cache.k_bits, cache.vt_bits, cache.k_bits.shape[2]
+        b = cache.block_table.shape[0]
+        hkv, dh = self.num_kv_heads, self.head_dim
+        page = cache.k_pages.shape[2]
+        w = cache.block_table.shape[1] * page
+        bt = jnp.clip(cache.block_table, 0, cache.k_pages.shape[0] - 1)
+        kc = jnp.moveaxis(cache.k_pages[bt], 1, 2).reshape(b, hkv, w, -1)
+        vc = jnp.moveaxis(cache.vt_pages[bt], 1, 3
+                          ).reshape(b, hkv, dh, w // packing.WORD)
+        return kc, vc, cache.ring_len
+
+    def _write_chunk(self, cache, k_bits: Array, s_v: Array, start: Array,
+                     valid: Array):
+        """Commit chunk K/V into the ring (select, last-writer-wins).
+
+        ``k_bits`` (B,Hkv,C,dhp) / ``s_v`` (B,Hkv,C,dh) are the chunk's
+        projections; slot s takes chunk token t_new = largest t <
+        start+valid with t % ring == s, IF that token is the chunk's
+        (>= start); all other slots keep their old contents.  Rows past
+        ``valid[b]`` never write — a row with valid == 0 writes NOTHING
+        and keeps its previous length, which is what lets the
+        speculative-verify path commit a per-sequence accepted prefix
+        (and lets inactive pool slots ride through untouched).  Returns
+        the updated cache with ``length = start + valid`` where any
+        token was written."""
+        b, _, c_len, _ = k_bits.shape
         paged = isinstance(cache, PagedKVCache)
         if paged:
             page = cache.k_pages.shape[2]
             ring = cache.ring_len
             w = cache.block_table.shape[1] * page
-            bt = jnp.clip(cache.block_table, 0, cache.k_pages.shape[0] - 1)
-            kc_old = jnp.moveaxis(cache.k_pages[bt], 1, 2
-                                  ).reshape(b, hkv, w, -1)
-            vc_old = jnp.moveaxis(cache.vt_pages[bt], 1, 3
-                                  ).reshape(b, hkv, dh, w // packing.WORD)
+            _, vc_old, _ = self._cache_ring_view(cache)
         else:
             w = cache.k_bits.shape[2]
             ring = w
-            kc_old, vc_old = cache.k_bits, cache.vt_bits
-        ctx_int = self._chunk_attend(params, q_bits, k_bits, s_v, kc_old,
-                                     vc_old, start, valid, positions, ring,
-                                     window)
-        out = self._output_deploy(params, ctx_int)
-
-        # -- ring write (select, last-writer-wins) -------------------------
-        # slot s takes chunk token t_new = largest t < start+valid with
-        # t % ring == s, IF that token is the chunk's (>= start); all other
-        # slots keep their old contents.  Pad rows (t >= start+valid) never
-        # write, so interleaved-decode garbage at slot ``start % ring`` is
-        # the only stale data — provably outside every later window.
+            vc_old = cache.vt_bits
         lv = start + valid
+        # rows that commit nothing keep their previous per-sequence length
+        new_len = jnp.where(valid > 0, lv, cache.length).astype(jnp.int32)
         s_all = jnp.arange(w)
         t_new = lv[:, None] - 1 - jnp.mod(lv[:, None] - 1 - s_all[None, :],
                                           ring)                # (B, W)
         wr = (t_new >= start[:, None]) & (t_new >= 0) & \
-             (s_all[None, :] < ring)
+             (s_all[None, :] < ring) & (valid[:, None] > 0)
         j = jnp.clip(t_new - start[:, None], 0, c_len - 1)
         kg = jnp.take_along_axis(k_bits, j[:, None, :, None],
                                  axis=2)                       # (B,Hkv,W,dhp)
@@ -803,7 +827,7 @@ class SPSAttention:
         if not paged:
             kc = jnp.where(wr[:, None, :, None], kg, cache.k_bits)
             vc = (cache.vt_bits & ~wr_words[:, None, None, :]) | new_words
-            return out, KVCache(kc, vc, lv)
+            return KVCache(kc, vc, new_len)
         # paged: scatter written slots/words through the block table;
         # unwritten positions route to the trash page 0 (page_size % 32
         # keeps whole V^T words inside one page)
@@ -825,7 +849,50 @@ class SPSAttention:
         merged = (vc_old & ~wr_words[:, None, None, :]) | new_words
         vp = cache.vt_pages.at[physw, :, :, wj2].set(
             jnp.moveaxis(merged, 3, 1))
-        return out, cache._replace(k_pages=kp, vt_pages=vp, length=lv)
+        return cache._replace(k_pages=kp, vt_pages=vp, length=new_len)
+
+    # -- deploy: speculative verify (attend-only) + deferred commit ----------
+
+    def deploy_verify_chunk(self, params: Params, x: Array, cache, *,
+                            window=None, start: Optional[Array] = None
+                            ) -> Tuple[Array, Tuple[Array, Array]]:
+        """Score a candidate chunk WITHOUT writing the cache.
+
+        x (B, C, d) holds the pending token + the drafted tokens of each
+        sequence; the attend is the same prefix-plus-intra-block path as
+        ``deploy_prefill_chunk`` (every row is real), but the ring write
+        is deferred: the method returns (out, (k_bits, s_v)) so the
+        caller can decide per sequence how many leading positions to
+        commit (``commit_chunk``) once acceptance is known.  Never
+        touching the cache before acceptance is what makes speculative
+        rollback exact even on wrapped SWA rings, where a write destroys
+        the evicted token irrecoverably."""
+        if self.cross:
+            raise ValueError("speculative verify is causal self-attention "
+                             "only (cross-attention memory is static)")
+        b, c_len, _ = x.shape
+        if start is None:
+            start = cache.length
+        start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+        valid = jnp.full((b,), c_len, jnp.int32)
+        positions = start[:, None] + jnp.arange(c_len)[None, :]
+        q_bits, k_bits, s_v = self._project_qkv_deploy(params, x, positions)
+        kc_old, vc_old, ring = self._cache_ring_view(cache)
+        ctx_int = self._chunk_attend(params, q_bits, k_bits, s_v, kc_old,
+                                     vc_old, start, valid, positions, ring,
+                                     window)
+        return self._output_deploy(params, ctx_int), (k_bits, s_v)
+
+    def commit_chunk(self, cache, proj: Tuple[Array, Array], start: Array,
+                     n_commit: Array):
+        """Write the first ``n_commit[b]`` positions of a verified chunk
+        (projections from ``deploy_verify_chunk``) at offset ``start[b]``.
+        Rows with n_commit == 0 are untouched (content AND length)."""
+        k_bits, s_v = proj
+        b = k_bits.shape[0]
+        start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+        n_commit = jnp.broadcast_to(jnp.asarray(n_commit, jnp.int32), (b,))
+        return self._write_chunk(cache, k_bits, s_v, start, n_commit)
 
     # -- deploy: cross-attention memory ---------------------------------------
 

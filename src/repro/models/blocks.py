@@ -282,6 +282,43 @@ class Block:
         new_cache["attn"] = kv
         return constrain(x, "batch", None, None), new_cache
 
+    def deploy_verify_chunk(self, params: Params, x: Array,
+                            cache: Dict[str, Any], *, start=None
+                            ) -> Tuple[Array, Any]:
+        """Speculative verify: run the block over a candidate chunk
+        WITHOUT writing the cache, returning (out, attn projections) so
+        ``commit_chunk`` can later write only the accepted prefix (see
+        SPSAttention.deploy_verify_chunk).  Attention-only blocks, like
+        chunked prefill."""
+        if self.kind != "attn":
+            raise ValueError(
+                f"speculative verify resumes attention caches only, not "
+                f"kind={self.kind!r} (recurrent families decode "
+                f"non-speculatively)")
+        cfg = self.cfg
+        parts = self._parts()
+        norm = nn.make_norm(cfg.norm, cfg.d_model)
+        h = norm.apply(params["norm1"], x)
+        h = constrain(h, "batch", None, None)
+        a_out, proj = parts["attn"].deploy_verify_chunk(
+            params["attn"], h, cache["attn"], window=self.window or None,
+            start=start)
+        x = x + a_out
+        if "ffn" in parts:
+            h2 = norm.apply(params["norm2"], x)
+            x = x + parts["ffn"].apply_deploy(params["ffn"], h2)
+        return constrain(x, "batch", None, None), proj
+
+    def commit_chunk(self, cache: Dict[str, Any], proj, start,
+                     n_commit) -> Dict[str, Any]:
+        """Write the accepted prefix of a verified chunk into this
+        block's attention cache (rows with n_commit == 0 untouched)."""
+        attn = self._parts()["attn"]
+        new_cache = dict(cache)
+        new_cache["attn"] = attn.commit_chunk(cache["attn"], proj, start,
+                                              n_commit)
+        return new_cache
+
     def init_cache(self, batch: int, max_len: int,
                    memory_len: int = 0,
                    paged: Optional[PageSpec] = None) -> Dict[str, Any]:

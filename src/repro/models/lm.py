@@ -381,6 +381,68 @@ class LMModel:
             new_caches.append(cache)
         return self._logits(dparams, self._last_real(x, sl)), new_caches
 
+    def verify_with_cache(self, dparams: Params, tokens: Array,
+                          caches: List[Dict[str, Any]], *,
+                          start: Optional[Array] = None
+                          ) -> Tuple[Array, List[Any]]:
+        """Speculative verify forward: score a (B, C) candidate chunk —
+        the pending token plus C-1 drafted tokens per sequence — against
+        the cached prefix WITHOUT writing the caches.
+
+        Returns (logits (B, C, V) at EVERY chunk position, per-layer attn
+        projections).  Row j's logits are the target distribution for the
+        token after prefix + chunk[:j+1], so the caller can accept a
+        per-sequence draft prefix and then ``commit_chunks`` exactly that
+        many positions.  Deferring the write is what keeps rollback exact
+        on wrapped SWA rings (a ring write destroys the evicted token).
+        Attention-only stacks, like chunked prefill."""
+        if self.cfg.frontend_tokens:
+            raise ValueError("speculative verify serves token-only "
+                             "decoders")
+        x = self._embed_tokens(dparams, tokens, None)
+        st = None if start is None else jnp.asarray(start, jnp.int32)
+        projs: List[Any] = []
+        for i, (kind, w) in enumerate(self.plan):
+            bp = (jax.tree.map(lambda t: t[i], dparams["blocks"])
+                  if self.uniform else dparams["blocks"][i])
+            x, proj = self._block(kind, w).deploy_verify_chunk(
+                bp, x, caches[i], start=st)
+            projs.append(proj)
+        return self._logits(dparams, x), projs
+
+    def commit_chunks(self, caches: List[Dict[str, Any]], projs: List[Any],
+                      start: Array, n_commit: Array
+                      ) -> List[Dict[str, Any]]:
+        """Commit the first ``n_commit[b]`` verified positions (per-layer
+        projections from ``verify_with_cache``) at offset ``start[b]``
+        into every layer's cache.  Rows with n_commit == 0 keep both
+        their cache content and their length — inactive pool slots ride
+        through a pooled speculative step untouched."""
+        return [self._block(kind, w).commit_chunk(c, p, start, n_commit)
+                for (kind, w), c, p in zip(self.plan, caches, projs)]
+
+    def truncate_deploy(self, dparams: Params, num_layers: int
+                       ) -> Tuple["LMModel", Params]:
+        """Layer-truncated self-speculative draft: the first
+        ``num_layers`` blocks of this model with the embedding, final
+        norm and LM head SHARED (same packed binary weights — the draft
+        adds no parameter memory, only its own small KV cache pool).
+        Early-exit logits off a prefix of the stack correlate with the
+        full model's because later blocks only add residuals, which is
+        exactly the self-speculative draft the serve engine batch-
+        verifies.  Returns (draft_model, draft_dparams)."""
+        n = num_layers
+        if not 1 <= n <= self.cfg.num_layers:
+            raise ValueError(f"draft depth {n} outside [1, "
+                             f"{self.cfg.num_layers}]")
+        draft = LMModel(self.cfg.truncated(n))
+        dd = {k: v for k, v in dparams.items() if k != "blocks"}
+        if self.uniform:
+            dd["blocks"] = jax.tree.map(lambda t: t[:n], dparams["blocks"])
+        else:
+            dd["blocks"] = list(dparams["blocks"][:n])
+        return draft, dd
+
     def init_caches(self, batch: int, max_len: int,
                     paged=None) -> List[Dict[str, Any]]:
         """Empty per-layer decode caches for a pool of ``batch`` slots.

@@ -1,0 +1,12 @@
+"""Continuous-batching serving on pooled binary KV caches.
+
+Submodules:
+  engine   ServeEngine / ServeConfig / Request / Scheduler — admission,
+           pooled decode, chunked prefill, prefix sharing, speculative
+           batch-verify decode.
+  kvcache  SlotPool / PageArena bookkeeping, slot scatters, cache_report.
+  sampler  greedy / temperature / top-k sampling and the rejection-
+           sampling speculative acceptance rule.
+"""
+
+__all__ = ["engine", "kvcache", "sampler"]

@@ -47,11 +47,28 @@ In-flight prefills are preemption-safe (eviction mid-prefill requeues the
 request; resume recomputes from the prompt) and grow their pages chunk by
 chunk in paged mode.
 
+``ServeConfig.spec_decode`` layers self-speculative decoding on the same
+pooled step: a layer-truncated draft sharing the trunk's packed weights
+(or an independent small draft passed to the engine) proposes k tokens
+per slot per iteration, and ONE pooled verify forward — the chunk-prefill
+prefix attend over the ring/block-table caches — scores all k+1 positions
+at once.  The verify never writes the caches; acceptance (greedy exact-
+match, or rejection sampling for temperature/top_k so the output
+distribution is provably unchanged) picks each slot's accepted prefix and
+exactly that prefix commits, so rejected drafts roll back bit-exactly in
+every layout — wrapped SWA rings, shared pages (conservatively COW'd
+before the step) and in-flight chunked prefills included — and over-grown
+pages un-grow back to the arena (``PageArena.truncate``, counted apart
+from retirement frees).  Decode is bandwidth-bound on the binary datapath,
+so verifying k+1 tokens costs about one decode step of weight/cache
+traffic: accepted tokens amortize the pool's per-step memory traffic.
+
 The binary cache is what makes deep pools cheap: each slot's decode state
 is 16-32x smaller than a bf16 KV cache (the paper's edge bandwidth story,
 transferred to serving), so slot count — i.e. serving concurrency — scales
 by the same factor at fixed memory.  ``cache_report`` surfaces the memory
-win, slot occupancy/utilization and page-arena occupancy/fragmentation.
+win, slot occupancy/utilization, page-arena occupancy/fragmentation and
+speculative accept rate / tokens-per-verify-step.
 """
 from __future__ import annotations
 
@@ -65,7 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import packing
-from repro.models.attention import PagedKVCache, PageSpec
+from repro.models.attention import KVCache, PagedKVCache, PageSpec
 from repro.serve import kvcache, sampler as sampler_lib
 
 Params = Any
@@ -110,6 +127,22 @@ class ServeConfig:
         so output stays token-for-token identical to the unshared paths.
         False keeps the PR 2 one-owner-per-page behavior (the escape
         hatch the benchmark compares against).
+      spec_decode: self-speculative decoding — k drafted tokens per slot
+        per engine iteration, batch-verified in ONE pooled k+1-token
+        verify forward that reuses the chunk-prefill prefix attend.
+        Accepted prefixes commit to the caches; rejected tails are never
+        written (rollback is exact in every layout, wrapped SWA rings
+        included) and in paged mode over-grown pages un-grow back to the
+        arena.  Greedy output is bit-identical to plain decode;
+        temperature/top_k use rejection-sampling acceptance so the token
+        distribution is provably unchanged.  None disables.  Attention-
+        only stacks (recurrent families decode non-speculatively, like
+        ``prefill_chunk``).
+      spec_draft_layers: depth of the layer-truncated draft sharing the
+        trunk's packed weights (clamped to the stack depth; a full-depth
+        "draft" degenerates to the trunk itself and accepts everything).
+        Ignored when an explicit draft model is passed to ``ServeEngine``
+        — an independent small binary draft with its own params.
     """
     max_len: int = 2048
     sampler: str = "greedy"          # greedy | temperature | top_k
@@ -124,6 +157,8 @@ class ServeConfig:
     num_pages: Optional[int] = None
     prefill_chunk: Optional[int] = None
     prefix_share: bool = True
+    spec_decode: Optional[int] = None
+    spec_draft_layers: int = 1
 
     def __post_init__(self):
         if self.prefill_chunk is not None and (
@@ -132,6 +167,12 @@ class ServeConfig:
             raise ValueError(
                 f"prefill_chunk must be a positive multiple of the "
                 f"packing word ({packing.WORD}), got {self.prefill_chunk}")
+        if self.spec_decode is not None and self.spec_decode < 1:
+            raise ValueError(f"spec_decode must draft at least one token "
+                             f"per step, got {self.spec_decode}")
+        if self.spec_decode is not None and self.spec_draft_layers < 1:
+            raise ValueError(f"spec_draft_layers must be >= 1, got "
+                             f"{self.spec_draft_layers}")
 
     def page_spec(self) -> PageSpec:
         """Resolve the paged-cache sizing (PageSpec validates itself)."""
@@ -261,12 +302,24 @@ def _pow2_bucket(n: int, lo: int = 16) -> int:
 
 
 class ServeEngine:
-    def __init__(self, model, dparams: Params, cfg: ServeConfig):
+    def __init__(self, model, dparams: Params, cfg: ServeConfig,
+                 draft_model=None, draft_dparams: Optional[Params] = None):
+        """``draft_model``/``draft_dparams`` optionally supply an
+        INDEPENDENT speculative draft (a small BinaryConfig model with
+        its own converted params); with ``cfg.spec_decode`` set and no
+        explicit draft, a layer-truncated draft sharing the trunk's
+        packed weights is built lazily (``cfg.spec_draft_layers``)."""
         self.model = model
         self.dparams = dparams
         self.cfg = cfg
+        if (draft_model is None) != (draft_dparams is None):
+            raise ValueError("pass draft_model and draft_dparams together")
+        self.draft_model = draft_model
+        self.draft_dparams = draft_dparams
         self._decode_jit = None
         self._chunk_jit = None
+        self._draft_chunk_jit = None
+        self._spec_jit = None
         self._fallback_jit = None
         self._sample = {
             "greedy": lambda lg, k: sampler_lib.greedy(lg),
@@ -312,6 +365,150 @@ class ServeEngine:
                 dparams, toks, max_len=max_len, seq_lens=seq_lens)
 
         self._fallback_jit = jax.jit(pre, static_argnums=(3,))
+
+    # -- speculative decode --------------------------------------------------
+
+    def _resolve_draft(self) -> None:
+        """Materialize the draft model: the explicit independent draft if
+        one was passed, else the layer-truncated self-speculative draft
+        (first ``spec_draft_layers`` blocks + shared embed/norm/head)."""
+        if self.draft_model is not None:
+            plan = getattr(self.draft_model, "plan", None)
+            if plan is None or {k for k, _ in plan} != {"attn"}:
+                raise ValueError("speculative draft must be an attention-"
+                                 "only decoder stack")
+            return
+        n = min(self.cfg.spec_draft_layers, self.model.cfg.num_layers)
+        self.draft_model, self.draft_dparams = self.model.truncate_deploy(
+            self.dparams, n)
+
+    def _build_draft_chunk_step(self):
+        """Chunk-prefill step for the DRAFT cache pool — the draft must
+        stream long prompts alongside the trunk so an in-flight prefill's
+        draft state is ready the moment the slot joins the decode pool."""
+
+        def step(ddparams, toks, dcaches, slot, start, valid):
+            sub = kvcache.extract_slots(dcaches, slot)
+            _, sub = self.draft_model.prefill_with_cache(
+                ddparams, toks, caches=sub, start=start, seq_lens=valid)
+            return kvcache.writeback_slots(dcaches, sub, slot)
+
+        self._draft_chunk_jit = jax.jit(step, donate_argnums=(2,))
+
+    def _build_spec_step(self):
+        """One pooled speculative iteration, ONE jit:
+
+          1. the draft autoregressively proposes k tokens per slot from
+             the pending token (k+1 scan steps — the extra step ingests
+             d_k so the draft cache covers every accept outcome),
+          2. the trunk scores all k+1 candidate positions in a single
+             verify forward (chunk-prefill prefix attend, NO cache write),
+          3. rejection-sampling / greedy acceptance picks each slot's
+             accepted prefix and its bonus-or-residual token,
+          4. exactly the accepted prefix commits to the trunk caches
+             (inactive slots commit nothing), and the draft lengths roll
+             back to the committed position.
+
+        Rejected drafts are never written to the trunk cache, so rollback
+        is exact in every layout — wrapped SWA rings included, where a
+        write irrecoverably destroys the evicted token."""
+        k = self.cfg.spec_decode
+        stochastic = self.cfg.sampler != "greedy"
+
+        def rollback_draft(c0, c1, start, n_commit, active):
+            """Restore a draft KVCache to committed state: every ring
+            slot whose LAST scan-writer was a rejected position (or any
+            position, for inactive slots — n_commit 0 rejects all) takes
+            its pre-scan content back.  Without this, a wrapped SWA draft
+            ring keeps rejected-draft K/V where evicted window tokens
+            used to be, and the draft's proposals silently degrade (the
+            acceptance rule keeps output exact, but the speedup erodes).
+            Same last-writer-wins slot map as SPSAttention._write_chunk."""
+            w = c1.k_bits.shape[2]
+            s_all = jnp.arange(w)
+            lv = start + k + 1                 # end of the scan's writes
+            t_new = lv[:, None] - 1 - jnp.mod(
+                lv[:, None] - 1 - s_all[None, :], w)           # (B, W)
+            written = t_new >= start[:, None]
+            rejected = written & (t_new >= (start + n_commit)[:, None])
+            kc = jnp.where(rejected[:, None, :, None], c0.k_bits, c1.k_bits)
+            rej_w = packing.pack_bits(rejected.astype(jnp.uint32))
+            vc = ((c1.vt_bits & ~rej_w[:, None, None, :]) |
+                  (c0.vt_bits & rej_w[:, None, None, :]))
+            length = jnp.where(active, start + n_commit,
+                               c0.length).astype(jnp.int32)
+            return KVCache(kc, vc, length)
+
+        def step(dparams, ddparams, token, caches, dcaches, start, active,
+                 key):
+            b = token.shape[0]
+            d_pre = [c["attn"] for c in dcaches if "attn" in c]
+
+            def draft_body(carry, _):
+                tok, dc, dkey = carry
+                lg, dc = self.draft_model.decode_step(ddparams, tok, dc)
+                dkey, sub = jax.random.split(dkey)
+                nxt = self._sample(lg[:, -1:], sub)            # (B, 1)
+                q = (sampler_lib.sampling_probs(
+                    lg[:, -1], self.cfg.sampler, self.cfg.temperature,
+                    self.cfg.top_k) if stochastic else jnp.zeros((b, 0)))
+                return (nxt, dc, dkey), (nxt[:, 0], q)
+
+            (_, dcaches, key), (drafts, qs) = jax.lax.scan(
+                draft_body, (token, dcaches, key), None, length=k + 1)
+            drafts_bk = jnp.swapaxes(drafts[:k], 0, 1)         # (B, k)
+            chunk_toks = jnp.concatenate([token, drafts_bk], axis=1)
+            logits, projs = self.model.verify_with_cache(
+                dparams, chunk_toks, caches, start=start)
+            if stochastic:
+                key, sub = jax.random.split(key)
+                out, n_acc = sampler_lib.speculative_accept(
+                    drafts_bk, jnp.swapaxes(qs[:k], 0, 1), logits, sub,
+                    sampler=self.cfg.sampler, temp=self.cfg.temperature,
+                    k=self.cfg.top_k)
+            else:
+                out, n_acc = sampler_lib.speculative_accept(
+                    drafts_bk, None, logits, None)
+            n_commit = jnp.where(active, n_acc + 1, 0).astype(jnp.int32)
+            caches = self.model.commit_chunks(caches, projs, start,
+                                              n_commit)
+            # draft rollback: the scan wrote positions start..start+k, of
+            # which the first n_commit hold exactly the committed tokens;
+            # rejected-tail slots (every slot, for inactive rows) restore
+            # their pre-scan content so the draft cache always equals the
+            # committed sequence — lengths AND ring bits
+            it = iter(d_pre)
+            dcaches = [
+                dict(c, attn=rollback_draft(next(it), c["attn"], start,
+                                            n_commit, active))
+                if "attn" in c else c for c in dcaches]
+            nxt = jnp.take_along_axis(out, n_acc[:, None], axis=1)
+            return out, n_acc, nxt, caches, dcaches, key
+
+        self._spec_jit = jax.jit(step, donate_argnums=(3, 4))
+
+    def _draft_admit(self, dcaches, reqs: List[Request],
+                     resumed: List[List[int]], slots: List[int],
+                     draft_len: int):
+        """Prefill an admission wave through the DRAFT stack and scatter
+        it into the draft pool (always contiguous rings — the draft pool
+        is a small fraction of the trunk's and is not paged).  Logits are
+        discarded: the first token after admission is sampled from the
+        TRUNK's prefill, the draft only needs the prompt in its cache."""
+        toks = [np.concatenate([np.asarray(r.tokens, np.int32),
+                                np.asarray(res, np.int32)])
+                for r, res in zip(reqs, resumed)]
+        lens = [len(t) for t in toks]
+        batch = np.zeros((len(reqs), max(lens)), np.int32)
+        for i, t in enumerate(toks):
+            batch[i, :lens[i]] = t
+        kw: Dict[str, Any] = {}
+        if len(set(lens)) > 1:
+            kw["seq_lens"] = np.asarray(lens, np.int32)
+        _, seq = self.draft_model.prefill_with_cache(
+            self.draft_dparams, jnp.asarray(batch), max_len=draft_len,
+            **kw)
+        return kvcache.insert_slots(dcaches, seq, slots)
 
     # -- public API ---------------------------------------------------------------
 
@@ -484,8 +681,8 @@ class ServeEngine:
         In paged mode each iteration also grows every active slot's block
         tables to cover its next token, preempting the lowest-priority
         slot back to the queue when the arena runs dry."""
-        if getattr(self.model.cfg, "frontend_tokens", 0) or \
-                not hasattr(self.model, "init_caches"):
+        if (getattr(self.model.cfg, "frontend_tokens", 0)
+                or not hasattr(self.model, "init_caches")):
             raise ValueError("continuous batching serves decoder-only "
                              "token models")
         plan = getattr(self.model, "plan", [])
@@ -502,8 +699,8 @@ class ServeEngine:
             if r.max_new_tokens <= 0:
                 raise ValueError(f"request {r.rid}: max_new_tokens must "
                                  "be positive")
-            if full_attn and len(r.tokens) + r.max_new_tokens > \
-                    (spec.capacity if spec else self.cfg.max_len):
+            if full_attn and len(r.tokens) + r.max_new_tokens > (
+                    spec.capacity if spec else self.cfg.max_len):
                 if spec:
                     raise ValueError(
                         f"request {r.rid}: prompt ({len(r.tokens)}) + "
@@ -519,8 +716,15 @@ class ServeEngine:
         pool = kvcache.SlotPool(max(1, min(self.cfg.num_slots,
                                            len(requests) or 1)))
         # chunked prefill needs the cache-continuation path, which is
-        # attention-only (recurrent state has no chunk-resume face)
+        # attention-only (recurrent state has no chunk-resume face);
+        # speculative decode rides the same verify attend, so it is
+        # attention-only too — recurrent families decode plainly
         chunk = self.cfg.prefill_chunk if self._ragged_ok else None
+        spec_k = self.cfg.spec_decode if (self.cfg.spec_decode and
+                                          self._ragged_ok) else None
+        # candidate write span per pooled step: the pending token plus
+        # the k drafted tokens (non-speculative steps write one position)
+        span = (spec_k + 1) if spec_k else 1
         arenas: Dict[int, kvcache.PageArena] = {}
         rings: List[Optional[int]] = []
         if spec:
@@ -540,7 +744,20 @@ class ServeEngine:
         inflight: Dict[int, _PrefillState] = {}
         results: Dict[int, np.ndarray] = {}
         resumed: Dict[int, List[int]] = {}   # rid -> tokens before preempt
-        if self._decode_jit is None:
+        dcaches = None
+        draft_len = 0
+        if spec_k:
+            self._resolve_draft()
+            # the draft pool is contiguous (a small, unshared fraction of
+            # the trunk's footprint) but must cover the trunk's capacity
+            draft_len = spec.capacity if spec else self.cfg.max_len
+            dcaches = self.draft_model.init_caches(pool.num_slots,
+                                                   draft_len)
+            if self._spec_jit is None:
+                self._build_spec_step()
+            if chunk and self._draft_chunk_jit is None:
+                self._build_draft_chunk_step()
+        if not spec_k and self._decode_jit is None:
             self._build_decode()
         if chunk and self._chunk_jit is None:
             self._build_chunk_step()
@@ -549,6 +766,10 @@ class ServeEngine:
         prefill_chunks = 0
         preemptions = 0
         admit_seq = 0
+        spec_steps = 0
+        spec_slot_steps = 0      # (active slot, verify step) pairs
+        spec_drafted = 0
+        spec_accepted = 0
         peak_pages = 0       # true simultaneous peak across all arenas
 
         def release_slot(slot: int) -> _SlotState:
@@ -655,6 +876,12 @@ class ServeEngine:
                 pre = [resumed.pop(r.rid, []) for r in reqs]
                 caches, first, key = self._admit(
                     caches, reqs, pre, [s for s, _ in admitted], key)
+                if spec_k:
+                    # the draft pool prefills the same wave so drafting
+                    # can start from the committed prompt immediately
+                    dcaches = self._draft_admit(
+                        dcaches, reqs, pre, [s for s, _ in admitted],
+                        draft_len)
                 for (slot, req), tok, res in zip(admitted, first, pre):
                     st = _SlotState(req, self.cfg.eos_id,
                                     len(req.tokens) + len(res),
@@ -699,6 +926,13 @@ class ServeEngine:
                     jnp.asarray([slot], jnp.int32),
                     jnp.asarray([st.done], jnp.int32),
                     jnp.asarray([n], jnp.int32))
+                if spec_k:
+                    # keep the draft cache streaming in lockstep
+                    dcaches = self._draft_chunk_jit(
+                        self.draft_dparams, jnp.asarray(buf), dcaches,
+                        jnp.asarray([slot], jnp.int32),
+                        jnp.asarray([st.done], jnp.int32),
+                        jnp.asarray([n], jnp.int32))
                 prefill_chunks += 1
                 st.done += n
                 if final:
@@ -715,13 +949,15 @@ class ServeEngine:
                         retire(slot)
             if not states:
                 continue
-            # -- paged growth: cover the next token; preempt on exhaustion --
+            # -- paged growth: cover the write span; preempt on exhaustion --
+            # (span = 1 plain decode; k+1 with speculative decode — the
+            # pending token plus every drafted candidate position)
             if arenas:
                 copies: Dict[int, List[Tuple[int, int]]] = {}
                 while True:
                     ok = True
                     for slot in sorted(states):
-                        need = states[slot].cache_len + 1
+                        need = states[slot].cache_len + span
                         if not all(a.grow(slot, need)
                                    for a in arenas.values()):
                             ok = False
@@ -734,20 +970,29 @@ class ServeEngine:
                         # later admission adopts diverged content.  Only
                         # decoding slots write divergent bits — in-flight
                         # prefills are masked onto the trash page below.
+                        # Speculative steps sweep the whole candidate span
+                        # conservatively: acceptance isn't known yet, and
+                        # a shared page must be private BEFORE any commit
+                        # write could land in it.
                         for ring, a in arenas.items():
                             for slot in sorted(states):
-                                lp, page = a.write_page(
-                                    slot, states[slot].cache_len)
-                                if page == 0:
-                                    continue
-                                if a.refcount(page) > 1:
-                                    if not a.can_cow():
-                                        ok = False
-                                        break
-                                    copies.setdefault(ring, []).append(
-                                        a.cow(slot, lp))
-                                elif a.page_key(page) is not None:
-                                    a.invalidate_key(page)
+                                base = states[slot].cache_len
+                                done_lp = set()
+                                for pos in range(base, base + span):
+                                    lp, page = a.write_page(slot, pos)
+                                    if page == 0 or lp in done_lp:
+                                        continue
+                                    done_lp.add(lp)
+                                    if a.refcount(page) > 1:
+                                        if not a.can_cow():
+                                            ok = False
+                                            break
+                                        copies.setdefault(ring, []).append(
+                                            a.cow(slot, lp))
+                                    elif a.page_key(page) is not None:
+                                        a.invalidate_key(page)
+                                if not ok:
+                                    break
                             if not ok:
                                 break
                     if ok:
@@ -775,20 +1020,63 @@ class ServeEngine:
             # (mid-prefill slots ride along as garbage rows: their one
             # stale write per iteration lands at the position the NEXT
             # chunk overwrites — or outside every later window — and their
-            # sampled tokens are simply never read)
-            token, caches, key = self._decode_jit(
-                self.dparams, jnp.asarray(token_buf), caches, key)
-            toks = np.asarray(token)
-            pool.tick(busy=len(states))
-            token_buf = toks.copy()
-            for slot in sorted(states):
-                st = states[slot]
-                st.cache_len += 1
-                tok = int(toks[slot, 0])
-                if stream_cb:
-                    stream_cb(st.request.rid, len(st.generated), tok)
-                if st.push(tok):
-                    retire(slot)
+            # sampled tokens are simply never read.  Speculative steps
+            # instead mask non-decoding slots out of the commit entirely
+            # — n_commit 0 writes nothing — because a multi-token garbage
+            # write could wrap onto window content a later chunk query
+            # still needs.)
+            if spec_k:
+                start_buf = np.zeros((pool.num_slots,), np.int32)
+                active_buf = np.zeros((pool.num_slots,), bool)
+                for s in states:
+                    start_buf[s] = states[s].cache_len
+                    active_buf[s] = True
+                out, n_acc, nxt, caches, dcaches, key = self._spec_jit(
+                    self.dparams, self.draft_dparams,
+                    jnp.asarray(token_buf), caches, dcaches,
+                    jnp.asarray(start_buf), jnp.asarray(active_buf), key)
+                out_np = np.asarray(out)
+                n_np = np.asarray(n_acc)
+                pool.tick(busy=len(states))
+                token_buf = np.asarray(nxt).copy()
+                spec_steps += 1
+                spec_slot_steps += len(states)
+                for slot in sorted(states):
+                    st = states[slot]
+                    n = int(n_np[slot])
+                    spec_drafted += spec_k
+                    spec_accepted += n
+                    st.cache_len += n + 1
+                    for i in range(n + 1):
+                        tok = int(out_np[slot, i])
+                        if stream_cb:
+                            stream_cb(st.request.rid, len(st.generated),
+                                      tok)
+                        if st.push(tok):
+                            retire(slot)
+                            break
+                # speculative rollback, arena side: pages grown for the
+                # candidate span un-grow back to exactly the committed
+                # length (rejected-tail pages return to the free list,
+                # counted as rollback frees, never as retirements)
+                if arenas:
+                    for slot in sorted(states):
+                        for a in arenas.values():
+                            a.truncate(slot, states[slot].cache_len)
+            else:
+                token, caches, key = self._decode_jit(
+                    self.dparams, jnp.asarray(token_buf), caches, key)
+                toks = np.asarray(token)
+                pool.tick(busy=len(states))
+                token_buf = toks.copy()
+                for slot in sorted(states):
+                    st = states[slot]
+                    st.cache_len += 1
+                    tok = int(toks[slot, 0])
+                    if stream_cb:
+                        stream_cb(st.request.rid, len(st.generated), tok)
+                    if st.push(tok):
+                        retire(slot)
 
         report = kvcache.cache_report(
             caches,
@@ -798,10 +1086,13 @@ class ServeEngine:
             active=[s in states for s in range(pool.num_slots)],
             busy_slot_steps=pool.busy_slot_steps,
             decode_steps=pool.decode_steps,
-            arenas=list(arenas.values()) if arenas else None)
+            arenas=list(arenas.values()) if arenas else None,
+            spec_drafted=spec_drafted if spec_k else None,
+            spec_accepted=spec_accepted, spec_slot_steps=spec_slot_steps)
         report["prefill_batches"] = float(prefill_batches)
         report["prefill_chunks"] = float(prefill_chunks)
         report["requests"] = float(len(requests))
+        report["spec_steps"] = float(spec_steps)
         if spec:
             report["preemptions"] = float(preemptions)
             # cache_report sums per-arena peaks, which can land on

@@ -59,7 +59,9 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
                  slot_lengths: Optional[Sequence[int]] = None,
                  active: Optional[Sequence[bool]] = None,
                  busy_slot_steps: int = 0, decode_steps: int = 0,
-                 arenas: Optional[Sequence["PageArena"]] = None
+                 arenas: Optional[Sequence["PageArena"]] = None,
+                 spec_drafted: Optional[int] = None,
+                 spec_accepted: int = 0, spec_slot_steps: int = 0
                  ) -> Dict[str, float]:
     """Memory + (optionally) per-slot occupancy/utilization stats.
 
@@ -86,8 +88,15 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
       share-rate stats stay honest), pages_shared (usable pages mapped
       by >1 slot right now), prefix_lookups / prefix_hits /
       prefix_hit_rate (admission prefix pages that consulted the
-      hash-cons table and the fraction adopted instead of allocated) and
-      cow_copies (copy-on-write privatizations).
+      hash-cons table and the fraction adopted instead of allocated),
+      cow_copies (copy-on-write privatizations), and pages_freed_retire /
+      pages_freed_rollback (page frees from retirement-or-preemption
+      ``release`` vs speculative-rollback ``truncate`` — separated so a
+      spec-decode run can't masquerade rollback churn as retirement).
+      With spec_drafted (speculative decode ran) also spec_drafted,
+      spec_accepted, spec_accept_rate (accepted drafts / drafted) and
+      spec_tokens_per_step (mean committed tokens per active slot per
+      verify step: 1 bonus/resample + the accepted drafts).
     """
     total = cache_bytes(caches)
     per_tok = total / max(seq_len * batch, 1)
@@ -138,6 +147,16 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
         report["prefix_hits"] = float(hits)
         report["prefix_hit_rate"] = hits / max(lookups, 1)
         report["cow_copies"] = float(sum(a.cow_copies for a in arenas))
+        report["pages_freed_retire"] = float(
+            sum(a.retire_frees for a in arenas))
+        report["pages_freed_rollback"] = float(
+            sum(a.rollback_frees for a in arenas))
+    if spec_drafted is not None:
+        report["spec_drafted"] = float(spec_drafted)
+        report["spec_accepted"] = float(spec_accepted)
+        report["spec_accept_rate"] = spec_accepted / max(spec_drafted, 1)
+        report["spec_tokens_per_step"] = (
+            (spec_accepted + spec_slot_steps) / max(spec_slot_steps, 1))
     return report
 
 
@@ -348,6 +367,11 @@ class PageArena:
         self.share_hits = 0        # pages adopted instead of allocated
         self.prefix_lookups = 0    # prefix pages that tried the table
         self.cow_copies = 0        # copy-on-write privatizations
+        # page-free provenance: retirement/preemption (``release``) vs
+        # speculative rollback (``truncate``) — kept separate so arena
+        # stats stay honest about WHY pages came back
+        self.retire_frees = 0
+        self.rollback_frees = 0
         self.peak_pages = 0
         self.peak_frag = 0.0       # internal fragmentation at peak occupancy
         self.dirty = True          # device tables not yet synced
@@ -474,6 +498,7 @@ class PageArena:
             self._ref[page] -= 1
             if self._ref[page] == 0:
                 self._free.append(page)
+                self.retire_frees += 1
                 self.invalidate_key(page)
         if n:
             self.block_tables[slot, :n] = 0
@@ -481,6 +506,32 @@ class PageArena:
         self._counts[slot] = 0
         self._lengths[slot] = 0
         self._promises.pop(slot, None)
+
+    def truncate(self, slot: int, length: int) -> int:
+        """Un-grow ``slot`` to exactly the pages covering ``length``
+        tokens — the speculative-rollback face of ``grow``.  Pages past
+        ``blocks_for(length)`` drop this slot's reference and return to
+        the free list with the LAST reader, exactly like ``release``,
+        but the frees are counted separately (``rollback_frees``) so
+        arena stats never conflate rejected-draft rollback with
+        retirement.  Returns the number of pages freed to the list."""
+        need = self.blocks_for(length)
+        have = int(self._counts[slot])
+        freed = 0
+        for lp in range(need, have):
+            page = int(self.block_tables[slot, lp])
+            self._ref[page] -= 1
+            if self._ref[page] == 0:
+                self._free.append(page)
+                self.rollback_frees += 1
+                freed += 1
+                self.invalidate_key(page)
+            self.block_tables[slot, lp] = 0
+        if have > need:
+            self._counts[slot] = need
+            self.dirty = True
+        self._lengths[slot] = min(int(self._lengths[slot]), length)
+        return freed
 
     # -- copy-on-write -----------------------------------------------------
 

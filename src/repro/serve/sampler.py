@@ -1,5 +1,18 @@
-"""Token samplers (pure, jit-friendly)."""
+"""Token samplers (pure, jit-friendly) + speculative acceptance math.
+
+The speculative-decode half implements standard rejection-sampling
+verification (Leviathan et al. / Chen et al.): the draft proposes token
+d_i ~ q_i, the target scores p_i, the verifier accepts d_i with
+probability min(1, p_i(d_i) / q_i(d_i)) and, at the first rejection,
+resamples from the residual norm(max(p_i - q_i, 0)).  The marginal
+distribution of every emitted token is EXACTLY the target sampler's —
+speculation changes latency, never the output distribution.  Greedy
+verification degenerates to exact argmax matching, which is what makes
+greedy speculative decode bit-identical to plain decode.
+"""
 from __future__ import annotations
+
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,5 +35,95 @@ def top_k(logits: Array, key: Array, k: int = 40,
     vals, idx = jax.lax.top_k(logits, k)
     pick = jax.random.categorical(key, vals / jnp.maximum(temp, 1e-4),
                                   axis=-1)
-    return jnp.take_along_axis(idx, pick[..., None], axis=-1)[..., 0] \
-        .astype(jnp.int32)
+    picked = jnp.take_along_axis(idx, pick[..., None], axis=-1)
+    return picked[..., 0].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: sampler distributions + batch acceptance
+# ---------------------------------------------------------------------------
+
+
+def sampling_probs(logits: Array, sampler: str, temp: float = 1.0,
+                   k: int = 40) -> Array:
+    """The EXACT token distribution the named sampler draws from.
+
+    logits (..., V) -> probs (..., V).  ``top_k`` reproduces the
+    ``top_k`` sampler's tie-breaking (``lax.top_k`` keeps the lowest
+    indices among equal logits), so rejection-sampling acceptance against
+    these probabilities preserves the non-speculative output distribution
+    exactly, ties included."""
+    if sampler == "greedy":
+        # point mass on the argmax (ties: lowest index, like jnp.argmax)
+        return jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1],
+                              dtype=jnp.float32)
+    z = logits / jnp.maximum(temp, 1e-4)
+    if sampler == "temperature":
+        return jax.nn.softmax(z, axis=-1)
+    if sampler == "top_k":
+        vals, idx = jax.lax.top_k(z, k)
+        pk = jax.nn.softmax(vals, axis=-1)
+        flat_idx = idx.reshape(-1, k)
+        flat_pk = pk.reshape(-1, k)
+        out = jnp.zeros((flat_idx.shape[0], logits.shape[-1]), jnp.float32)
+        out = out.at[jnp.arange(flat_idx.shape[0])[:, None], flat_idx].set(
+            flat_pk)
+        return out.reshape(logits.shape)
+    raise ValueError(f"unknown sampler {sampler!r}")
+
+
+def speculative_accept(drafts: Array, q_probs: Optional[Array],
+                       logits: Array, key: Optional[Array], *,
+                       sampler: str = "greedy", temp: float = 1.0,
+                       k: int = 40) -> Tuple[Array, Array]:
+    """Batch-verify k drafted tokens against k+1 rows of target logits.
+
+    Args:
+      drafts:  (B, k) int32 draft tokens d_1..d_k.
+      q_probs: (B, k, V) draft proposal distributions (None for greedy —
+        greedy acceptance is exact argmax matching and needs no q).
+      logits:  (B, k+1, V) target logits; row j scores the token AFTER
+        prefix + d_1..d_j (row k is the all-accepted bonus position).
+      key:     PRNG key (None for greedy).
+
+    Returns (out_tokens (B, k+1), n_accept (B,)): row b emits
+    out_tokens[b, :n_accept[b] + 1] — the accepted draft prefix followed
+    by one token sampled from the target (residual at the first
+    rejection, the bonus row when everything was accepted).  Positions
+    past n_accept[b] are padding and must not be read."""
+    b, kd = drafts.shape
+    i = jnp.arange(kd + 1)[None, :]
+    if sampler == "greedy":
+        tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, k+1)
+        accept = (drafts == tgt[:, :kd]).astype(jnp.int32)
+        acc = jnp.cumprod(accept, axis=1)
+        n = acc.sum(axis=1)                                   # (B,)
+        bonus = jnp.take_along_axis(tgt, n[:, None], axis=1)  # (B, 1)
+    else:
+        p = sampling_probs(logits, sampler, temp, k)          # (B,k+1,V)
+        p_d = jnp.take_along_axis(p[:, :kd], drafts[..., None],
+                                  axis=-1)[..., 0]            # (B, k)
+        q_d = jnp.take_along_axis(q_probs, drafts[..., None],
+                                  axis=-1)[..., 0]            # (B, k)
+        key, ku, kr = jax.random.split(key, 3)
+        u = jax.random.uniform(ku, (b, kd))
+        # accept iff u < min(1, p/q)  <=>  u * q < p  (d ~ q so q > 0)
+        accept = (u * q_d < p_d).astype(jnp.int32)
+        acc = jnp.cumprod(accept, axis=1)
+        n = acc.sum(axis=1)
+        # residual distributions: max(p_i - q_i, 0) per draft row (all-
+        # zero residual means p == q there — fall back to p); the bonus
+        # row k resamples from the target itself
+        resid = jnp.maximum(p[:, :kd] - q_probs, 0.0)
+        rsum = resid.sum(-1, keepdims=True)
+        resid = jnp.where(rsum > 0, resid, p[:, :kd])
+        full = jnp.concatenate([resid, p[:, kd:]], axis=1)    # (B,k+1,V)
+        r_n = jnp.take_along_axis(
+            full, n[:, None, None], axis=1)[:, 0]             # (B, V)
+        bonus = jax.random.categorical(
+            kr, jnp.log(jnp.maximum(r_n, 1e-38)), axis=-1
+        ).astype(jnp.int32)[:, None]
+    drafts_pad = jnp.concatenate([drafts, drafts[:, -1:]], axis=1)
+    out = jnp.where(i < n[:, None], drafts_pad,
+                    jnp.where(i == n[:, None], bonus, 0))
+    return out.astype(jnp.int32), n.astype(jnp.int32)

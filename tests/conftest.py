@@ -9,6 +9,20 @@ import pytest
 # keep tests deterministic and quiet
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Hypothesis CI profiles (no-op under the deterministic shim): the PR
+# kernel-differential job selects "pr" (derandomized — a small, stable
+# slice), the nightly sweep selects "nightly" and widens the budget via
+# the REPRO_FUZZ_EXAMPLES env var the fuzz files read (explicit
+# per-test max_examples would override a profile, an env var cannot be).
+try:  # pragma: no cover - depends on whether hypothesis is installed
+    from hypothesis import settings as _hsettings
+
+    _hsettings.register_profile("pr", deadline=None, derandomize=True)
+    _hsettings.register_profile("nightly", deadline=None, print_blob=True)
+    _hsettings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+except ImportError:
+    pass
+
 
 @pytest.fixture
 def rng():

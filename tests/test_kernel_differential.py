@@ -11,10 +11,17 @@ oracle (all outputs are integers or integer-valued floats, so equality
 is exact, never allclose).
 
 The quick smoke variants run in tier-1; the wide sweeps are marked
-``slow`` and run in the dedicated CI kernel-differential job
-(``.github/workflows/ci.yml``) with ``JAX_PLATFORMS=cpu`` and hypothesis
-deadlines disabled (every ``@settings`` below sets ``deadline=None``).
+``slow`` and run in CI (``.github/workflows/ci.yml``) with
+``JAX_PLATFORMS=cpu`` and hypothesis deadlines disabled (every
+``@settings`` below sets ``deadline=None``) in two flavours: a SMALL
+DETERMINISTIC slice on every PR (``HYPOTHESIS_PROFILE=pr`` +
+``REPRO_FUZZ_EXAMPLES=8``) and the wide nightly sweep
+(``schedule:``-triggered, ``--hypothesis-seed=random``,
+``REPRO_FUZZ_EXAMPLES`` raised).  The env var scales every sweep's
+example budget without touching the per-test defaults below.
 """
+import os
+
 import numpy as np
 import pytest
 
@@ -28,6 +35,12 @@ from repro.kernels.paged_attn import ops as pa_ops, ref as pa_ref
 from repro.kernels.rbmm import ops as rbmm_ops, ref as rbmm_ref
 from repro.kernels.rbmm_mxu import ops as mxu_ops, ref as mxu_ref
 from repro.kernels.sps_attn import ops as sa_ops, ref as sa_ref
+
+
+def _budget(default: int) -> int:
+    """Per-sweep example budget: REPRO_FUZZ_EXAMPLES overrides (the CI
+    nightly raises it, the PR slice shrinks it), else the default."""
+    return int(os.environ.get("REPRO_FUZZ_EXAMPLES", "0")) or default
 
 
 # ---------------------------------------------------------------------------
@@ -50,7 +63,7 @@ def _rbmm_case(rng, m, k, p, scheme):
 @given(st.integers(1, 70), st.integers(1, 130), st.integers(1, 70),
        st.sampled_from(["xnor", "and_dc"]), st.integers(3, 40),
        st.integers(3, 40), st.integers(0, 2**31 - 1))
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=_budget(40), deadline=None)
 @pytest.mark.slow
 def test_rbmm_int_fuzz(m, k, p, scheme, bm, bn, seed):
     """Random (M, K, P) — K deliberately spanning non-multiples of the
@@ -66,7 +79,7 @@ def test_rbmm_int_fuzz(m, k, p, scheme, bm, bn, seed):
 @given(st.integers(1, 50), st.integers(1, 96), st.integers(1, 50),
        st.sampled_from(["xnor", "and_dc"]), st.booleans(),
        st.integers(3, 24), st.integers(3, 24), st.integers(0, 2**31 - 1))
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=_budget(40), deadline=None)
 @pytest.mark.slow
 def test_rbmm_binary_fuzz(m, k, p, scheme, causal, bm, bn, seed):
     rng = np.random.default_rng(seed)
@@ -99,7 +112,7 @@ def test_rbmm_int_edge_shapes_smoke():
 @given(st.integers(1, 40), st.integers(32, 160), st.integers(1, 40),
        st.booleans(), st.integers(3, 24), st.integers(3, 24),
        st.integers(1, 4), st.integers(0, 2**31 - 1))
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=_budget(40), deadline=None)
 @pytest.mark.slow
 def test_rbmm_mxu_fuzz(m, k, p, unsigned, bm, bn, bkw, seed):
     """±1 and {0,1} activations; K spans non-word-multiples but bk obeys
@@ -139,7 +152,7 @@ def test_rbmm_mxu_edge_shapes_smoke():
        st.sampled_from(["vpu", "mxu"]), st.booleans(),
        st.sampled_from([32, 64, 96]), st.sampled_from([32, 64, 96]),
        st.integers(0, 2**31 - 1))
-@settings(max_examples=30, deadline=None)
+@settings(max_examples=_budget(30), deadline=None)
 @pytest.mark.slow
 def test_sps_attn_fuzz(h, l, dh, path, causal, bq, bk, seed):
     """Sequence lengths spanning non-multiples of every block size."""
@@ -182,7 +195,7 @@ def test_sps_attn_edge_shapes_smoke():
 
 @given(st.integers(1, 80), st.integers(1, 400), st.booleans(),
        st.integers(3, 40), st.integers(1, 4), st.integers(0, 2**31 - 1))
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=_budget(40), deadline=None)
 @pytest.mark.slow
 def test_pack_fuzz(m, k, ints, bm, bw, seed):
     """Float and int inputs, K far from word/block multiples."""
@@ -207,7 +220,7 @@ def test_pack_fuzz(m, k, ints, bm, bw, seed):
 @given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3),
        st.sampled_from([32, 64]), st.sampled_from([32, 64]),
        st.integers(1, 4), st.integers(0, 2**31 - 1))
-@settings(max_examples=30, deadline=None)
+@settings(max_examples=_budget(30), deadline=None)
 @pytest.mark.slow
 def test_paged_gather_decode_fuzz(b, hkv, groups, dh, page, nblk, seed):
     """Random arenas: trash-page entries, ragged lengths past the ring,

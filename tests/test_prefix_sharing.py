@@ -19,6 +19,8 @@ Two kinds of pins:
   sliding-window wrap forces a real copy-on-write, and when chunked
   prefill interleaves with decode mid-share.
 """
+import os
+
 import numpy as np
 import pytest
 
@@ -176,7 +178,8 @@ def _release(arena, oracle, slot):
 
 @given(st.integers(0, 2**31 - 1), st.sampled_from([64, 96, 128]),
        st.integers(6, 12))
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=int(os.environ.get("REPRO_FUZZ_EXAMPLES", "0"))
+          or 200, deadline=None)
 def test_arena_refcount_cow_state_machine(seed, ring, num_pages):
     """Random admit/write/fork/preempt/retire sequences hold every arena
     invariant (see module docstring) against the content oracle."""

@@ -4,6 +4,7 @@ linear-scan deque it replaced — highest priority first, FIFO within a
 priority class, and requeued (preempted) requests resume before every
 queued peer of their class, most recent requeue first."""
 import collections
+import os
 
 import numpy as np
 
@@ -45,7 +46,8 @@ def _req(rid, priority):
 
 
 @given(st.integers(0, 2**31 - 1), st.integers(1, 4))
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=int(os.environ.get("REPRO_FUZZ_EXAMPLES", "0"))
+          or 40, deadline=None)
 def test_scheduler_matches_deque_reference(seed, n_prios):
     """Random interleavings of add / requeue / pop must produce the exact
     same pop order as the reference implementation."""

@@ -1,0 +1,388 @@
+"""Self-speculative batch-verify decode: greedy output must be BIT-
+IDENTICAL to plain decode across dense/MoE/SWA x contiguous/paged x
+prefix-share on/off x chunked-prefill interleaved (the verify attend
+never writes the cache, so rejected drafts roll back exactly — wrapped
+SWA rings included); stochastic acceptance must preserve the target
+sampler's token distribution (rejection sampling, chi-squared pinned);
+and the arena's speculative ``truncate`` must un-grow pages with frees
+counted separately from retirement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.configs import base
+from repro.models.lm import build_model
+from repro.serve import kvcache, sampler
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+
+
+def _build(arch):
+    cfg = base.get_smoke_config(arch)
+    model = build_model(cfg)
+    dparams = model.convert(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, dparams
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    return _build("smollm-135m")
+
+
+def _prompts(cfg, lens, seed=3, shared=0):
+    rng = np.random.default_rng(seed)
+    sysp = rng.integers(0, cfg.vocab_size, (shared,)).astype(np.int32)
+    return [np.concatenate(
+        [sysp, rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)])
+        for n in lens]
+
+
+# ---------------------------------------------------------------------------
+# Greedy bit-identity: the serve equivalence suite
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(paged=True, prefix_share=False),
+    dict(paged=True, prefix_share=True),
+    dict(paged=True, prefix_share=True, prefill_chunk=32),
+    dict(prefill_chunk=32),
+], ids=["contig", "paged", "paged+share", "paged+share+chunk", "chunk"])
+def test_greedy_spec_identical_dense(smollm, kw):
+    """Dense arch through every cache layout, with chunked prefill
+    interleaving mid-speculation where set."""
+    cfg, model, dparams = smollm
+    prompts = _prompts(cfg, (5, 45, 9), shared=40)
+    ref, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=128, num_slots=2)).generate(prompts, max_new_tokens=6)
+    out, report = ServeEngine(model, dparams, ServeConfig(
+        max_len=128, num_slots=2, spec_decode=4, spec_draft_layers=1,
+        **kw)).generate(prompts, max_new_tokens=6)
+    for i, (a, b) in enumerate(zip(ref, out)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    assert report["spec_steps"] > 0
+    assert 0.0 <= report["spec_accept_rate"] <= 1.0
+    assert report["spec_tokens_per_step"] >= 1.0
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "gemma3-27b"])
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+def test_greedy_spec_identical_moe_swa(arch, paged):
+    """MoE routing and mixed local/global sliding windows through the
+    verify-commit path."""
+    cfg, model, dparams = _build(arch)
+    prompts = _prompts(cfg, (33, 5), seed=7)
+    ref, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=96, num_slots=2)).generate(prompts, max_new_tokens=5)
+    out, report = ServeEngine(model, dparams, ServeConfig(
+        max_len=96, num_slots=2, paged=paged, spec_decode=4,
+        spec_draft_layers=1)).generate(prompts, max_new_tokens=5)
+    for i, (a, b) in enumerate(zip(ref, out)):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"{arch} paged={paged} request {i}")
+    assert report["spec_steps"] > 0
+
+
+def test_greedy_spec_swa_wrap_with_rejections():
+    """The hardest rollback case: an INDEPENDENT mismatched draft forces
+    rejections while the SWA rings have wrapped — a rejected write would
+    destroy evicted-window tokens irrecoverably, so this passing pins
+    that the verify path truly never writes rejected positions."""
+    cfg, model, dparams = _build("gemma3-27b")
+    ddparams = model.convert(model.init(jax.random.PRNGKey(99)))
+    prompts = _prompts(cfg, (30, 9), seed=11)
+    ref, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=96, num_slots=2)).generate(prompts, max_new_tokens=40)
+    out, report = ServeEngine(
+        model, dparams,
+        ServeConfig(max_len=96, num_slots=2, paged=True, spec_decode=4),
+        draft_model=model, draft_dparams=ddparams,
+    ).generate(prompts, max_new_tokens=40)
+    for i, (a, b) in enumerate(zip(ref, out)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    # a different-seed draft must actually disagree sometimes, or this
+    # test exercised nothing
+    assert report["spec_accept_rate"] < 1.0
+
+
+def test_spec_preemption_resumes_exactly(smollm):
+    """Arena exhaustion preempts a speculating slot; recompute-resume
+    (and its draft-cache re-prefill) must stay bit-exact."""
+    cfg, model, dparams = smollm
+    pa, pb = _prompts(cfg, (30, 40), seed=17)
+    eng = ServeEngine(model, dparams, ServeConfig(
+        max_len=128, num_slots=2, paged=True, page_size=32, max_blocks=4,
+        num_pages=4, spec_decode=4, spec_draft_layers=1))
+    results, report = eng.serve(
+        [Request(rid=0, tokens=pa, max_new_tokens=40, priority=0),
+         Request(rid=1, tokens=pb, max_new_tokens=40, priority=1)])
+    assert report["preemptions"] >= 1.0
+    for rid, (p, n) in enumerate([(pa, 40), (pb, 40)]):
+        solo, _ = ServeEngine(model, dparams, ServeConfig(
+            max_len=128)).generate(p[None, :], max_new_tokens=n)
+        np.testing.assert_array_equal(solo[0], results[rid],
+                                      err_msg=f"rid {rid}")
+
+
+def test_spec_eos_retires_mid_batch(smollm):
+    """EOS landing inside an accepted draft batch must retire the slot at
+    the EOS token, exactly like plain decode."""
+    cfg, model, dparams = smollm
+    (p,) = _prompts(cfg, (6,), seed=23)
+    plain, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=64)).generate(p[None, :], max_new_tokens=8)
+    eos = int(plain[0][3])              # retire 4 tokens in
+    ref, _ = ServeEngine(model, dparams, ServeConfig(max_len=64)).serve(
+        [Request(rid=0, tokens=p, max_new_tokens=8, eos_id=eos)])
+    got, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=64, spec_decode=4, spec_draft_layers=1)).serve(
+        [Request(rid=0, tokens=p, max_new_tokens=8, eos_id=eos)])
+    np.testing.assert_array_equal(ref[0], got[0])
+    assert got[0][-1] == eos and len(got[0]) <= 8
+
+
+def test_full_depth_draft_accepts_everything(smollm):
+    """A draft as deep as the trunk IS the trunk (shared weights), so
+    greedy acceptance must be 100% and every verify step must commit
+    k+1 tokens — a deterministic pin of the whole accept/commit path."""
+    cfg, model, dparams = smollm
+    prompts = _prompts(cfg, (6, 9), seed=5)
+    out, report = ServeEngine(model, dparams, ServeConfig(
+        max_len=64, num_slots=2, spec_decode=3,
+        spec_draft_layers=cfg.num_layers)).generate(
+            prompts, max_new_tokens=7)
+    ref, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=64, num_slots=2)).generate(prompts, max_new_tokens=7)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    assert report["spec_accept_rate"] == 1.0
+    assert report["spec_tokens_per_step"] == 4.0
+
+
+def test_recurrent_families_decode_plainly():
+    """hybrid/ssm stacks have no attention-only verify path; spec_decode
+    must be ignored (still exact, no spec stats)."""
+    for arch in ("hymba-1.5b", "xlstm-350m"):
+        cfg, model, dparams = _build(arch)
+        prompts = _prompts(cfg, (10, 5), seed=11)
+        ref, _ = ServeEngine(model, dparams, ServeConfig(
+            max_len=64, num_slots=2)).generate(prompts, max_new_tokens=3)
+        out, report = ServeEngine(model, dparams, ServeConfig(
+            max_len=64, num_slots=2, spec_decode=4)).generate(
+                prompts, max_new_tokens=3)
+        for a, b in zip(ref, out):
+            np.testing.assert_array_equal(a, b, err_msg=arch)
+        assert report["spec_steps"] == 0.0
+        assert "spec_accept_rate" not in report
+
+
+# ---------------------------------------------------------------------------
+# Sampler acceptance math
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_probs_match_samplers():
+    """sampling_probs must be the exact distribution each sampler draws
+    from — including top_k's lowest-index tie-breaking."""
+    logits = jnp.asarray([[0.0, 2.0, 2.0, -1.0, 1.0]])
+    p = sampler.sampling_probs(logits, "greedy")
+    np.testing.assert_array_equal(np.asarray(p[0]), [0, 1, 0, 0, 0])
+    p = sampler.sampling_probs(logits, "temperature", temp=1.0)
+    np.testing.assert_allclose(np.asarray(p[0]),
+                               np.asarray(jax.nn.softmax(logits[0])),
+                               rtol=1e-6)
+    p = np.asarray(sampler.sampling_probs(logits, "top_k", temp=1.0, k=2)[0])
+    # lax.top_k keeps the LOWER index among the tied logits 1 and 2
+    assert p[1] > 0 and p[2] > 0 and p[0] == 0 and p[3] == 0 and p[4] == 0
+    np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-6)
+    counts = np.zeros(5)
+    for i in range(200):
+        counts[int(sampler.top_k(logits[None], jax.random.PRNGKey(i),
+                                 k=2, temp=1.0)[0, 0])] += 1
+    assert counts[0] == counts[3] == counts[4] == 0   # same support
+
+
+def test_speculative_accept_greedy_prefix():
+    """Accept exactly the leading argmax-matching prefix, then emit the
+    target argmax at the first mismatch (or the bonus row)."""
+    v = 4
+    tgt = jnp.asarray([[1, 2, 3], [1, 0, 3], [2, 2, 2]])   # (B, k+1) argmax
+    logits = jax.nn.one_hot(tgt, v) * 10.0
+    drafts = jnp.asarray([[1, 2], [1, 2], [0, 1]])
+    out, n = sampler.speculative_accept(drafts, None, logits, None)
+    np.testing.assert_array_equal(np.asarray(n), [2, 1, 0])
+    # row 0: both accepted + bonus row argmax; row 1: d1 then correction
+    # 0; row 2: immediate correction 2
+    np.testing.assert_array_equal(np.asarray(out[0]), [1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(out[1, :2]), [1, 0])
+    assert int(out[2, 0]) == 2
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_speculative_first_token_distribution(seed):
+    """Rejection-sampling acceptance preserves the target distribution:
+    the FIRST emitted token of a verify step is distributed exactly as
+    the target sampler regardless of the draft — chi-squared over a
+    small vocab (B parallel slots = B trials)."""
+    rng = np.random.default_rng(seed)
+    v, k, trials = 5, 2, 4000
+    q_logits = rng.normal(size=(1, k, v)).astype(np.float32)
+    t_logits = rng.normal(size=(1, k + 1, v)).astype(np.float32)
+    q = np.asarray(jax.nn.softmax(jnp.asarray(q_logits), -1))
+    q_b = jnp.asarray(np.broadcast_to(q, (trials, k, v)))
+    logits_b = jnp.asarray(np.broadcast_to(t_logits, (trials, k + 1, v)))
+    key = jax.random.PRNGKey(seed % (2**31 - 1))
+    kd, ka = jax.random.split(key)
+    drafts = jax.random.categorical(
+        kd, jnp.log(q_b), axis=-1).astype(jnp.int32)          # d ~ q
+    out, n = sampler.speculative_accept(
+        drafts, q_b, logits_b, ka, sampler="temperature", temp=1.0)
+    first = np.asarray(out[:, 0])
+    p0 = np.asarray(jax.nn.softmax(jnp.asarray(t_logits[0, 0])))
+    obs = np.bincount(first, minlength=v).astype(np.float64)
+    exp = p0 * trials
+    chi2 = ((obs - exp) ** 2 / np.maximum(exp, 1e-9)).sum()
+    # df = v - 1 = 4; 26.0 is far beyond the 99.99th percentile
+    assert chi2 < 26.0, (chi2, obs, exp)
+
+
+def test_speculative_accept_identical_draft_is_lossless():
+    """q == p accepts (almost surely) everything: acceptance ratio is 1
+    and the residual fallback path must not fire spuriously."""
+    rng = np.random.default_rng(0)
+    v, k, b = 6, 3, 512
+    logits = jnp.asarray(rng.normal(size=(b, k + 1, v)).astype(np.float32))
+    p = jax.nn.softmax(logits[:, :k], -1)
+    drafts = jax.random.categorical(jax.random.PRNGKey(1),
+                                    logits[:, :k], axis=-1)
+    _, n = sampler.speculative_accept(
+        drafts.astype(jnp.int32), p, logits, jax.random.PRNGKey(2),
+        sampler="temperature", temp=1.0)
+    assert int(np.asarray(n).min()) == k
+
+
+# ---------------------------------------------------------------------------
+# Arena rollback (un-grow) bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_arena_truncate_ungrows_and_counts_rollback():
+    a = kvcache.PageArena(num_pages=6, page_size=32, num_slots=2,
+                          num_blocks=4, ring_len=128)
+    assert a.grow(0, 40)                 # 2 pages
+    assert a.grow(0, 40 + 5)             # speculative span: no new page
+    assert a.used_pages == 2
+    assert a.grow(0, 70)                 # 3rd page for the candidate span
+    assert a.used_pages == 3
+    freed = a.truncate(0, 41)            # commit landed at 41
+    assert freed == 1 and a.used_pages == 2
+    assert a.rollback_frees == 1 and a.retire_frees == 0
+    a.release(0)
+    assert a.retire_frees == 2 and a.rollback_frees == 1
+    assert a.free_pages == 6
+
+
+def test_arena_truncate_respects_shared_refcounts():
+    """Truncating past an adopted (shared) page drops only this slot's
+    reference — the other reader keeps the page and its key."""
+    a = kvcache.PageArena(num_pages=4, page_size=32, num_slots=2,
+                          num_blocks=3, ring_len=96)
+    a.set_prefix_keys(0, [b"k0", b"k1"], 64)
+    assert a.grow(0, 64)
+    a.set_prefix_keys(1, [b"k0", b"k1"], 64)
+    assert a.grow(1, 70)                 # adopts 2 shared + 1 private
+    assert a.shared_pages == 2 and a.used_pages == 3
+    freed = a.truncate(1, 64)            # drop the private growth page
+    assert freed == 1 and a.rollback_frees == 1
+    # shrinking INTO the shared range releases slot 1's reference but
+    # frees nothing (slot 0 still reads those pages)
+    assert a.truncate(1, 32) == 0
+    assert a.shared_pages == 1 and a.refcount(a.block_tables[0, 1]) == 1
+    assert a.rollback_frees == 1
+    a.release(0)
+    a.release(1)                         # last reader of the shared page
+    assert a.free_pages == 4
+
+
+def test_cache_report_spec_and_free_provenance_keys(smollm):
+    cfg, model, dparams = smollm
+    prompts = _prompts(cfg, (5, 36), seed=29)
+    _, report = ServeEngine(model, dparams, ServeConfig(
+        max_len=96, num_slots=2, paged=True, spec_decode=4,
+        spec_draft_layers=1)).generate(prompts, max_new_tokens=6)
+    for k in ("spec_drafted", "spec_accepted", "spec_accept_rate",
+              "spec_tokens_per_step", "pages_freed_retire",
+              "pages_freed_rollback"):
+        assert k in report, k
+    assert report["pages_freed_retire"] > 0      # both requests retired
+    assert 1.0 <= report["spec_tokens_per_step"] <= 5.0
+
+
+def test_engine_rollback_frees_pages(smollm):
+    """A draft that always disagrees (different-seed params) commits one
+    token per step while the candidate span keeps crossing page
+    boundaries — rollback must return those over-grown pages."""
+    cfg, model, dparams = smollm
+    ddparams = model.convert(model.init(jax.random.PRNGKey(123)))
+    (p,) = _prompts(cfg, (30,), seed=31)
+    ref, _ = ServeEngine(model, dparams, ServeConfig(
+        max_len=128)).generate(p[None, :], max_new_tokens=40)
+    results, report = ServeEngine(
+        model, dparams,
+        ServeConfig(max_len=128, paged=True, page_size=32, num_slots=1,
+                    spec_decode=4),
+        draft_model=model, draft_dparams=ddparams,
+    ).serve([Request(rid=0, tokens=p, max_new_tokens=40)])
+    np.testing.assert_array_equal(ref[0], results[0])
+    if report["spec_accept_rate"] < 0.5:
+        assert report["pages_freed_rollback"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Config / construction validation
+# ---------------------------------------------------------------------------
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        ServeConfig(spec_decode=0)
+    with pytest.raises(ValueError, match="spec_draft_layers"):
+        ServeConfig(spec_decode=2, spec_draft_layers=0)
+    assert ServeConfig(spec_decode=4).spec_decode == 4
+    assert ServeConfig().spec_decode is None
+
+
+def test_truncated_config_and_draft_builder(smollm):
+    cfg, model, dparams = smollm
+    with pytest.raises(ValueError):
+        cfg.truncated(0)
+    with pytest.raises(ValueError):
+        cfg.truncated(cfg.num_layers + 1)
+    draft, dd = model.truncate_deploy(dparams, 1)
+    assert draft.cfg.num_layers == 1
+    # shared trunk weights: the draft's block params are views of the
+    # trunk's first block, embed/head are the same objects
+    assert dd["embed"] is dparams["embed"]
+    lg_d = draft.prefill_logits(dd, jnp.zeros((1, 4), jnp.int32))
+    assert lg_d.shape == (1, 4, cfg.vocab_size)
+
+
+def test_engine_rejects_mismatched_draft_args(smollm):
+    cfg, model, dparams = smollm
+    with pytest.raises(ValueError, match="together"):
+        ServeEngine(model, dparams, ServeConfig(spec_decode=2),
+                    draft_model=model)
+
+
+def test_engine_rejects_recurrent_draft():
+    cfg_r, model_r, dparams_r = _build("xlstm-350m")
+    cfg, model, dparams = _build("smollm-135m")
+    eng = ServeEngine(model, dparams,
+                      ServeConfig(max_len=64, spec_decode=2),
+                      draft_model=model_r, draft_dparams=dparams_r)
+    with pytest.raises(ValueError, match="attention-only"):
+        eng.serve([Request(rid=0, tokens=np.ones((4,), np.int32),
+                           max_new_tokens=2)])
