@@ -207,6 +207,10 @@ def main(argv=None):
     p.add_argument("--spec-draft-layers", type=int, default=1,
                    help="depth of the layer-truncated draft (shares the "
                         "trunk's packed weights)")
+    p.add_argument("--autotune", action="store_true",
+                   help="append a tiny fused-kernel block-size/layout "
+                        "sweep (benchmarks/kernel_autotune.py) to the "
+                        "report, embedded under the 'autotune' JSON key")
     p.add_argument("--json", default=None,
                    help="write the per-run result dict as JSON (the CI "
                         "bench-smoke job uploads this artifact and fails "
@@ -313,11 +317,25 @@ def main(argv=None):
               f"{sp['spec_steps']:.0f} steps "
               f"(amortizes per-step weight+cache traffic by the same "
               f"factor on bandwidth-bound hardware)")
+    report = {name: {k: float(v) for k, v in r.items()}
+              for name, r in by_name.items()}
+    if args.autotune:
+        import kernel_autotune
+        sweep = kernel_autotune.autotune_sps(
+            h=cfg.num_heads, l=96, d_h=cfg.resolved_head_dim,
+            blocks=kernel_autotune.TINY_BLOCKS, iters=2, seed=args.seed)
+        best = sweep["best"]
+        if best is None:
+            raise SystemExit("autotune: no config matched the oracle")
+        print(f"  autotune best ({len(sweep['sweep'])} configs): "
+              f"{best['path']} bq={best['bq']} bk={best['bk']} "
+              f"({best['step_ms']:.2f} ms/step"
+              f"{', interpret mode' if sweep['interpret'] else ''})")
+        report["autotune"] = sweep
     if args.json:
         import json
         with open(args.json, "w") as f:
-            json.dump({name: {k: float(v) for k, v in r.items()}
-                       for name, r in by_name.items()}, f, indent=2)
+            json.dump(report, f, indent=2)
         print(f"  wrote {args.json}")
     return by_name
 

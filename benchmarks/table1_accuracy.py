@@ -145,6 +145,34 @@ def run(steps: int = 200, ft_steps: int = 100, verbose: bool = True
                                  lr=3e-4)
     sps_loss_ft = _eval_loss(sps_model, sps_params_ft, sps_cfg)
 
+    # --- deploy-face score-impl gate: the popcount score path ("auto")
+    # is EXACT, so deploy logits must be bit-identical across every
+    # score_impl — accuracy numbers can never move when switching score
+    # paths.  An approximate future path would surface here as a nonzero
+    # max deviation and must then be gated on the losses above.
+    dparams = sps_model.convert(sps_params_ft)
+    toks = jnp.asarray(stream.batch_at(0)["tokens"][:4])
+    ref_logits = None
+    score_impl_max_dev = 0.0
+    for si in ("popcount", "mxu", "dense"):
+        cfg_si = sps_cfg.with_(binary=dataclasses.replace(
+            sps_cfg.binary, score_impl=si))
+        logits = build_model(cfg_si).prefill_logits(dparams, toks)
+        if ref_logits is None:
+            ref_logits = logits
+        else:
+            score_impl_max_dev = max(
+                score_impl_max_dev,
+                float(jnp.max(jnp.abs(logits - ref_logits))))
+    if score_impl_max_dev:
+        raise SystemExit(
+            f"score_impl gate: deploy logits diverged across score "
+            f"paths (max dev {score_impl_max_dev}) — the popcount path "
+            f"must stay exact")
+    if verbose:
+        print(f"score_impl gate: popcount == mxu == dense deploy logits "
+              f"(max dev {score_impl_max_dev})")
+
     # --- Fig. 3 similarity on the last layer
     z, probs_teacher = layers[-1]
     sps_probs = sps_lib.sps(z, head_lams[-1][None, :, None, None])
@@ -157,6 +185,7 @@ def run(steps: int = 200, ft_steps: int = 100, verbose: bool = True
         "sps_eval_loss_post_ft": sps_loss_ft,
         "relative_perf_proxy": rel,
         "cosine": sim["cosine"], "pearson": sim["pearson"],
+        "score_impl_max_dev": score_impl_max_dev,
         **{f"cdr_{g}": r["cdr"] for g, r in gran_results.items()},
         **{f"search_s_{g}": r["search_s"] for g, r in gran_results.items()},
         "total_s": time.time() - t_start,

@@ -44,6 +44,12 @@ class BinaryConfig:
     enabled: bool = True
     # Execution path for binary matmuls: popcount | mxu | dense | auto
     impl: str = "auto"
+    # Execution path for deploy attention scores (q x k^T, Eq. 7):
+    # auto | popcount | mxu | dense.  "auto" resolves to "popcount" —
+    # scores run directly on the packed uint32 words (pad-corrected
+    # ``2*popcount(XNOR) - (d_h + 2*pad)``), never unpacking to ±1;
+    # "mxu"/"dense" keep the unpack paths as selectable bitwise oracles.
+    score_impl: str = "auto"
     # SPS threshold granularity: layer | head | row
     sps_granularity: str = "head"
     # attention mode: sps (COBRA) | bit_softmax (BiT teacher/baseline)

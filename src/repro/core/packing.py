@@ -76,11 +76,40 @@ def unpack_signs(packed: jax.Array, k: int, dtype=jnp.float32) -> jax.Array:
 def dc_count(packed: jax.Array, k: int) -> jax.Array:
     """Don't-care count delta_m: number of 0s in the *true* K region of a
     {0,1}-scheme datapack (Eq. 7, second case).  Pad bits are 0 by the A-pad
-    convention, so delta = K - popcount(words) only when K % 32 == 0;
-    otherwise we subtract the pad zeros explicitly."""
+    convention, so ``popcount(words)`` counts ones of the true K region only
+    and ``delta = K - popcount(words)`` is exact for EVERY K — no pad
+    subtraction needed (pad zeros sit outside the true region and contribute
+    nothing to the popcount).  Pinned for K % 32 != 0 in
+    ``tests/test_packing.py``."""
     pc = jax.lax.population_count(packed).astype(jnp.int32).sum(axis=-1)
     return jnp.int32(k) - pc
 
 
 def popcount_words(packed: jax.Array) -> jax.Array:
     return jax.lax.population_count(packed).astype(jnp.int32)
+
+
+def xnor_popcount_score(a: jax.Array, b: jax.Array, k: int) -> jax.Array:
+    """Eq. 7 signed-scheme score straight on packed words (pad-0 conv).
+
+    a, b: uint32 word arrays, broadcastable against each other, packed
+    along the LAST axis with ``ceil(k/32)`` words each and zero pad bits.
+    Returns ``sum_w 2*popcount(XNOR(a_w, b_w)) - (k + 2*pad)`` — exactly
+    the ±1 dot product of the encoded values, for every k: each of the
+    ``pad`` zero pad-bit pairs contributes XNOR(0,0)=1 to the popcount, a
+    static constant folded into the ``-k`` term.  This is the single
+    source of the pad correction the fused score kernels
+    (``repro.kernels.sps_attn`` / ``repro.kernels.paged_attn``) and the
+    model-level popcount score path apply in-formula."""
+    kp = a.shape[-1]
+    if b.shape[-1] != kp:
+        raise ValueError(
+            f"packed operands disagree on word count: {kp} vs "
+            f"{b.shape[-1]}")
+    if kp != packed_len(k):
+        raise ValueError(
+            f"operands carry {kp} packed words but k={k} needs "
+            f"ceil(k/32)={packed_len(k)}")
+    pad = kp * WORD - k
+    pc = jax.lax.population_count(~(a ^ b)).astype(jnp.int32).sum(axis=-1)
+    return 2 * pc - jnp.int32(k + 2 * pad)

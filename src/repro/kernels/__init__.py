@@ -10,4 +10,33 @@ Each kernel ships three files per the deliverable contract:
   sps_attn/  fused SPS binary attention (tile-decoupled streaming;
              simpler than FlashAttention — no softmax state)
   pack/      threshold-binarize + bit-pack (data packing conversion unit)
+  paged_attn/ fused paged gather-decode (block tables resolved in-grid)
+
+Dispatch: every ``ops.py`` wrapper routes through ``interpret_mode()``
+below — ONE rule instead of five inlined copies that could drift.
 """
+from __future__ import annotations
+
+import os
+
+import jax
+
+# Env override for the Mosaic-vs-interpret dispatch.  "1" forces interpret
+# mode even on TPU backends (reproduce a suspected interpret-only bug on
+# real hardware); "0" forces real lowering even off-TPU (reproduce a
+# real-lowering bug — e.g. a Mosaic layout error — on a CPU dev box, where
+# it fails loudly instead of silently passing in interpret mode).  Unset
+# or any other value keeps the backend-derived default.
+FORCE_INTERPRET_ENV = "REPRO_FORCE_INTERPRET"
+
+
+def interpret_mode() -> bool:
+    """Single source of the kernel dispatch rule: real Mosaic lowering on
+    TPU backends, interpret mode elsewhere (CPU CI), overridable either
+    way with ``REPRO_FORCE_INTERPRET=1|0``."""
+    forced = os.environ.get(FORCE_INTERPRET_ENV, "")
+    if forced == "1":
+        return True
+    if forced == "0":
+        return False
+    return jax.default_backend() != "tpu"

@@ -7,8 +7,10 @@ matmul input goes through, fused so the fp activations are read once and
 never materialized as a {0,1} tensor.  Pad bits (K % 32 != 0) are 0, per
 the packing convention in ``repro.core.packing``.
 
-Dispatch: real Mosaic lowering on TPU backends, interpret mode elsewhere
-(CPU CI).  Oracle: ``repro.kernels.pack.ref.pack_threshold`` (pure jnp,
+Dispatch: ``repro.kernels.interpret_mode()`` — real Mosaic lowering on
+TPU backends, interpret mode elsewhere (CPU CI),
+``REPRO_FORCE_INTERPRET`` overrides either way.
+Oracle: ``repro.kernels.pack.ref.pack_threshold`` (pure jnp,
 unblocked); ``tests/test_kernels.py`` holds kernel and oracle to
 bit-equality.
 """
@@ -16,10 +18,11 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import interpret_mode
 from repro.kernels.pack import kernel as _k
 
 
 def pack_threshold(x: jax.Array, theta: jax.Array, *, bm: int = _k.DEFAULT_BM,
                    bw: int = _k.DEFAULT_BW) -> jax.Array:
     return _k.pack_threshold(x, theta, bm=bm, bw=bw,
-                             interpret=jax.default_backend() != "tpu")
+                             interpret=interpret_mode())

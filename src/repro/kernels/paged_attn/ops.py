@@ -17,8 +17,17 @@ Under that invariant trash-page columns are always masked, which is what
 makes the kernel safe to run over free pool slots (zeroed rows, any
 stale length).
 
-Dispatch: real Mosaic lowering on TPU backends, interpret mode elsewhere
-(CPU CI).  ``SPSAttention(paged_kernel=True)`` routes paged decode here;
+Padding contract: packed operands must carry exactly ``ceil(d_h/32)``
+words with ZERO pad bits (the ``packing.pack_bits`` default).  The
+kernel applies the Eq. 7 pad correction in-formula
+(``c = 2*popcount(q XNOR k) - (d_h + 2*pad)``), so d_h need NOT be a
+multiple of 32 — but a mismatched word count would silently shift every
+score, so the wrapper validates it and raises.
+
+Dispatch: ``repro.kernels.interpret_mode()`` — real Mosaic lowering on
+TPU backends, interpret mode elsewhere (CPU CI),
+``REPRO_FORCE_INTERPRET`` overrides either way.
+``SPSAttention(paged_kernel=True)`` routes paged decode here;
 ``paged_kernel=False`` (the default) is the escape hatch — it keeps the
 gather + ``_attend_cache`` path, which doubles as the bitwise reference
 for this kernel.
@@ -28,9 +37,11 @@ fused ``kernel.py`` must match the unfused, unpacked ``ref.py`` oracle
 bit-for-bit, and the oracle in turn mirrors the graph-level path the
 kernel replaces — here ``ref.paged_gather_decode`` materializes the
 gathered view exactly like ``SPSAttention._deploy_decode_paged`` and
-attends with dense integer matmuls.  ``tests/test_paged_kernel.py`` pins
-kernel == ref across page sizes, GQA group counts, ragged lengths and
-SWA rings, and model-level decode with ``paged_kernel=True`` ==
+attends with dense integer matmuls (``ref.paged_gather_decode_popcount``
+is the second oracle: same gather, but scores and context stay on packed
+uint32 words end to end).  ``tests/test_paged_kernel.py`` pins kernel ==
+ref across page sizes, GQA group counts, ragged lengths and SWA rings,
+and model-level decode with ``paged_kernel=True`` ==
 ``paged_kernel=False``; ``tests/test_kernel_differential.py`` fuzzes the
 same equivalences with hypothesis-driven shapes.
 """
@@ -38,13 +49,33 @@ from __future__ import annotations
 
 import jax
 
+from repro.core import packing
+from repro.kernels import interpret_mode
 from repro.kernels.paged_attn import kernel as _k
+
+
+def _validate(q_bits: jax.Array, k_pages: jax.Array, vt_pages: jax.Array,
+              d_h: int) -> None:
+    dhp = packing.packed_len(d_h)
+    if q_bits.shape[-1] != dhp or k_pages.shape[-1] != dhp:
+        raise ValueError(
+            f"paged_gather_decode: packed K operands must carry "
+            f"ceil(d_h/32)={dhp} words for d_h={d_h}, got "
+            f"q={q_bits.shape[-1]} k_pages={k_pages.shape[-1]} — repack "
+            f"with repro.core.packing (pad bits must be 0)")
+    page = k_pages.shape[2]
+    if page % packing.WORD or vt_pages.shape[-1] != page // packing.WORD:
+        raise ValueError(
+            f"paged_gather_decode: page_size={page} must be a multiple of "
+            f"{packing.WORD} with vt_pages packing {page // packing.WORD} "
+            f"words per page, got {vt_pages.shape[-1]}")
 
 
 def paged_gather_decode(q_bits: jax.Array, k_pages: jax.Array,
                         vt_pages: jax.Array, block_table: jax.Array,
                         lengths: jax.Array, ring_len: jax.Array,
                         theta: jax.Array, *, d_h: int) -> jax.Array:
+    _validate(q_bits, k_pages, vt_pages, d_h)
     return _k.paged_gather_decode(
         q_bits, k_pages, vt_pages, block_table, lengths, ring_len, theta,
-        d_h=d_h, interpret=jax.default_backend() != "tpu")
+        d_h=d_h, interpret=interpret_mode())

@@ -1,6 +1,13 @@
-"""Oracle for the fused paged gather-decode kernel: materialize the
-gathered ring view (exactly what the fused kernel exists to avoid),
-unpack everything, and attend with plain jnp integer arithmetic."""
+"""Oracles for the fused paged gather-decode kernel, both pure jnp.
+
+``paged_gather_decode``          — materialize the gathered ring view
+    (exactly what the fused kernel exists to avoid), unpack everything,
+    attend with dense integer matmuls.  The ground truth.
+``paged_gather_decode_popcount`` — same gather, but scores and context
+    stay on packed uint32 words end to end: Eq. 7 scores via
+    ``packing.xnor_popcount_score`` (pad-corrected, exact for every d_h)
+    and context via popcount(probs & V^T).  The pure-jnp mirror of the
+    kernel's in-tile arithmetic; bit-identical to the dense oracle."""
 from __future__ import annotations
 
 import jax
@@ -48,3 +55,33 @@ def paged_gather_decode(q_bits: jax.Array, k_pages: jax.Array,
     v = packing.unpack_signs(vc, wg, jnp.int32)           # (B, Hkv, dh, Wg)
     v = jnp.repeat(v, g, axis=1)
     return jnp.einsum("bhw,bhdw->bhd", probs, v)
+
+
+def paged_gather_decode_popcount(q_bits: jax.Array, k_pages: jax.Array,
+                                 vt_pages: jax.Array,
+                                 block_table: jax.Array,
+                                 lengths: jax.Array, ring_len,
+                                 theta: jax.Array, *,
+                                 d_h: int) -> jax.Array:
+    """Same contract as ``paged_gather_decode``, but no ±1 unpack ever
+    happens: scores and context run on the packed words (the second
+    oracle of ops.py's testing pattern).  Bit-for-bit identical."""
+    b, h, _ = q_bits.shape
+    hkv = k_pages.shape[1]
+    kc, vc = gather_ring_view(k_pages, vt_pages, block_table)
+    wg = kc.shape[2]
+    g = h // hkv
+    kc = jnp.repeat(kc, g, axis=1)                        # (B, H, Wg, dhp)
+    c = packing.xnor_popcount_score(q_bits[:, :, None, :], kc, d_h)
+    probs = (c >= theta[:, :, None].astype(jnp.int32)).astype(jnp.uint32)
+    cols = jnp.arange(wg)[None, :]
+    valid = (cols <= jnp.asarray(lengths, jnp.int32)[:, None]) & \
+            (cols < jnp.asarray(ring_len, jnp.int32).reshape(-1)[0])
+    probs = probs * valid[:, None, :].astype(jnp.uint32)
+    # and_dc context on packed probs vs packed V^T (pad bits 0 in both)
+    probs_p = packing.pack_bits(probs)                    # (B, H, Wg/32)
+    nnz = probs.sum(-1, dtype=jnp.int32)                  # (B, H)
+    vc = jnp.repeat(vc, g, axis=1)                        # (B, H, dh, Wg/32)
+    pc = jax.lax.population_count(
+        probs_p[:, :, None, :] & vc).astype(jnp.int32).sum(-1)
+    return 2 * pc - nnz[..., None]

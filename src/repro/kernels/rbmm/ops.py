@@ -9,8 +9,10 @@ product of the underlying value matrices —
 against ``theta`` (optionally causally masked) and returns packed binary
 probabilities plus their nnz — the SPS attention inner loop.
 
-Dispatch rule: real Mosaic lowering on TPU backends, interpret mode
-elsewhere (CPU CI).  Oracle: ``repro.kernels.rbmm.ref`` (pure jnp,
+Dispatch rule: ``repro.kernels.interpret_mode()`` — real Mosaic lowering
+on TPU backends, interpret mode elsewhere (CPU CI),
+``REPRO_FORCE_INTERPRET`` overrides either way.
+Oracle: ``repro.kernels.rbmm.ref`` (pure jnp,
 unblocked; ``ref.rbmm_int_dense`` is the ground-truth dense matmul);
 ``tests/test_kernels.py`` holds kernel and oracle to bit-equality.
 ``repro.core.rbmm`` holds the shape-polymorphic jnp implementation used
@@ -22,11 +24,8 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.kernels import interpret_mode as _interpret
 from repro.kernels.rbmm import kernel as _k
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def rbmm_int(a: jax.Array, b: jax.Array, k: int, *, scheme: str = "xnor",

@@ -7,8 +7,10 @@ unpacked to ±1 *inside* the kernel tile so the contraction runs on the
 MXU while HBM only ever sees 1-bit weights (the bandwidth story for
 deploy-time BinaryDense layers whose activations stay real).
 
-Dispatch: real Mosaic lowering on TPU backends, interpret mode elsewhere
-(CPU CI).  Oracle: ``repro.kernels.rbmm_mxu.ref.rbmm_mxu`` (unpack then
+Dispatch: ``repro.kernels.interpret_mode()`` — real Mosaic lowering on
+TPU backends, interpret mode elsewhere (CPU CI),
+``REPRO_FORCE_INTERPRET`` overrides either way.
+Oracle: ``repro.kernels.rbmm_mxu.ref.rbmm_mxu`` (unpack then
 jnp dot); ``tests/test_kernels.py`` holds kernel and oracle to
 bit-equality.
 """
@@ -16,6 +18,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import interpret_mode
 from repro.kernels.rbmm_mxu import kernel as _k
 
 
@@ -23,4 +26,4 @@ def rbmm_mxu(a_vals: jax.Array, w_packed: jax.Array, *,
              bm: int = _k.DEFAULT_BM, bn: int = _k.DEFAULT_BN,
              bk: int = _k.DEFAULT_BK) -> jax.Array:
     return _k.rbmm_mxu(a_vals, w_packed, bm=bm, bn=bn, bk=bk,
-                       interpret=jax.default_backend() != "tpu")
+                       interpret=interpret_mode())

@@ -2,31 +2,56 @@
 
 Contract: ``sps_attention(q_bits, k_bits (H, L, ceil(d_h/32)) uint32,
 v (H, L, d_h) ±1 values, theta (H,) int32)`` returns the (H, L, d_h)
-int32 context of softmax-free SPS attention: causal XNOR-popcount scores,
-probability = score >= theta, context = probs @ v — with probs packed
-in-flight (``path="vpu"`` ANDs them against a packed V^T, the decode
-cache layout; ``path="mxu"`` keeps them dense for the matrix unit).  The
-L x L score matrix never materializes; this kernel is the fused Pallas
-mirror of the chunked ``lax.map`` attention in
+int32 context of softmax-free SPS attention: causal XNOR-popcount scores
+computed directly on the packed words (``c = 2*popcount(q XNOR k) -
+(d_h + 2*pad)`` — the Eq. 7 pad correction, so d_h need NOT be a
+multiple of 32), probability = score >= theta, context = probs @ v —
+with probs packed in-flight (``path="vpu"`` ANDs them against a packed
+V^T, the decode cache layout; ``path="mxu"`` keeps them dense for the
+matrix unit).  The L x L score matrix never materializes; this kernel is
+the fused Pallas mirror of the chunked ``lax.map`` attention in
 ``repro.models.attention``.
 
-Dispatch: real Mosaic lowering on TPU backends, interpret mode elsewhere
-(CPU CI).  Oracle: ``repro.kernels.sps_attn.ref.sps_attention`` (unfused,
-unpacked, pure jnp; ``ref.v_transpose_packed`` builds the packed-V^T
-layout); ``tests/test_kernels.py`` holds kernel and oracle to
-bit-equality.
+Padding contract: operands must carry exactly ``ceil(d_h/32)`` packed
+words with ZERO pad bits (the ``packing.pack_bits`` default) — the
+wrapper validates the word count and raises instead of silently scoring
+wrong; pad-bit zeroing is the packer's guarantee.
+
+Dispatch: ``repro.kernels.interpret_mode()`` — real Mosaic lowering on
+TPU backends, interpret mode elsewhere (CPU CI), ``REPRO_FORCE_INTERPRET``
+overrides either way.  Oracles: ``repro.kernels.sps_attn.ref.sps_attention``
+(unfused, unpacked, dense-score; ``ref.v_transpose_packed`` builds the
+packed-V^T layout) and ``ref.sps_attention_popcount`` (unfused but
+packed-word end to end — the pure-jnp mirror of the in-kernel popcount
+score path); ``tests/test_kernels.py`` and
+``tests/test_kernel_differential.py`` hold kernel and both oracles to
+bit-equality.  ``bq``/``bk`` are the autotune block sizes swept by
+``benchmarks/kernel_autotune.py``.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.core import packing
+from repro.kernels import interpret_mode
 from repro.kernels.sps_attn import kernel as _k
+
+
+def _validate(q_bits: jax.Array, k_bits: jax.Array, d_h: int) -> None:
+    dhp = packing.packed_len(d_h)
+    if q_bits.shape[-1] != dhp or k_bits.shape[-1] != dhp:
+        raise ValueError(
+            f"sps_attention: packed operands must carry ceil(d_h/32)="
+            f"{dhp} words for d_h={d_h}, got q={q_bits.shape[-1]} "
+            f"k={k_bits.shape[-1]} — repack with repro.core.packing "
+            f"(pad bits must be 0)")
 
 
 def sps_attention(q_bits: jax.Array, k_bits: jax.Array, v: jax.Array,
                   theta: jax.Array, *, d_h: int, causal: bool = True,
                   path: str = "vpu", bq: int = _k.DEFAULT_BQ,
                   bk: int = _k.DEFAULT_BK) -> jax.Array:
+    _validate(q_bits, k_bits, d_h)
     return _k.sps_attention(q_bits, k_bits, v, theta, d_h=d_h, causal=causal,
                             path=path, bq=bq, bk=bk,
-                            interpret=jax.default_backend() != "tpu")
+                            interpret=interpret_mode())

@@ -1,4 +1,16 @@
-"""Oracle for the fused SPS attention kernel: unfused, unpacked, pure jnp."""
+"""Oracles for the fused SPS attention kernel, both pure jnp:
+
+``sps_attention``          — unfused AND unpacked: ±1 value tensors, dense
+                             integer einsum scores.  The ground truth.
+``sps_attention_popcount`` — unfused but PACKED end to end: scores via
+                             ``packing.xnor_popcount_score`` on the uint32
+                             words (the Eq. 7 ``-(d_h + 2*pad)`` pad
+                             correction, exact for every d_h) and context
+                             via popcount(probs & V^T) on the packed-V^T
+                             layout.  The pure-jnp mirror of the kernel's
+                             in-tile popcount score path; bit-identical to
+                             the dense oracle for the sign scheme.
+"""
 from __future__ import annotations
 
 import jax
@@ -28,3 +40,30 @@ def v_transpose_packed(v_vals: jax.Array) -> jax.Array:
     layout the vpu context path and the decode V-cache use)."""
     vt = jnp.swapaxes(v_vals, -1, -2)                     # (H, dh, L)
     return packing.pack_signs(vt)
+
+
+def sps_attention_popcount(q_bits: jax.Array, k_bits: jax.Array,
+                           vt_bits: jax.Array, theta: jax.Array, *,
+                           d_h: int, causal: bool = True) -> jax.Array:
+    """Packed-word twin of ``sps_attention``: the ±1 unpack before the
+    score einsum disappears — scores, probabilities and context all stay
+    on uint32 words.
+
+    q_bits/k_bits: (H, L, ceil(d_h/32)) packed (zero pad bits);
+    vt_bits: (H, d_h, ceil(L/32)) packed V^T (``v_transpose_packed``).
+    Returns (H, L, d_h) int32, bit-identical to the dense oracle."""
+    h, l, _ = q_bits.shape
+    c = packing.xnor_popcount_score(q_bits[:, :, None, :],
+                                    k_bits[:, None, :, :], d_h)  # (H,L,L)
+    probs = (c >= theta[:, None, None].astype(jnp.int32)).astype(jnp.uint32)
+    if causal:
+        mask = jnp.tril(jnp.ones((l, l), jnp.uint32))
+        probs = probs * mask[None]
+    # Eq. 7 and_dc context on packed probs vs packed V^T: the -L + delta
+    # terms telescope to -nnz (pad columns are 0 in BOTH operands)
+    probs_p = packing.pack_bits(probs)                    # (H, L, L/32)
+    nnz = probs.sum(-1, dtype=jnp.int32)                  # (H, L)
+    pc = jax.lax.population_count(
+        probs_p[:, :, None, :] & vt_bits[:, None, :, :]
+    ).astype(jnp.int32).sum(-1)                           # (H, L, dh)
+    return 2 * pc - nnz[..., None]

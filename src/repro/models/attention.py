@@ -48,6 +48,10 @@ ROW_TABLE = 512  # row-granularity lambda table (paper's l=512); longer rows cla
 # Default q-row chunk for the chunked attention scan.
 Q_CHUNK = 256
 
+# Deploy score-path impls (``SPSAttention.score_impl``): "auto" resolves to
+# "popcount" — see ``SPSAttention._score_impl``.
+SCORE_IMPLS = ("auto", "popcount", "mxu", "dense")
+
 
 # ---------------------------------------------------------------------------
 # RoPE
@@ -202,7 +206,14 @@ class SPSAttention:
     cross: bool = False             # cross-attention (KV from memory)
     dtype: Any = jnp.float32
     q_chunk: int = Q_CHUNK
-    impl: str = "auto"              # deploy matmul impl
+    impl: str = "auto"              # deploy matmul impl (projections / M4)
+    # deploy attention-score impl (q x k^T, Eq. 7).  "auto" resolves to
+    # "popcount": scores stay on the packed uint32 words end to end — no
+    # unpack-to-±1 before the score contraction — with the pad correction
+    # ``c = 2*popcount(XNOR) - (d_h + 2*pad)`` applied in-formula (exact
+    # for every d_h).  "mxu"/"dense" keep the unpack paths selectable as
+    # bitwise oracles; tests pin all three identical.
+    score_impl: str = "auto"
     # decode: read the KV cache grouped by kv head instead of materializing
     # a q-heads-wide repeat (G x less cache-sized intermediate traffic)
     grouped_decode: bool = False
@@ -487,6 +498,17 @@ class SPSAttention:
 
     # -- deploy shared pieces ----------------------------------------------
 
+    def _score_impl(self) -> str:
+        """Resolve the deploy score-path impl.  Unlike projection 'auto'
+        (M-dependent popcount/mxu split in ``rbmm.resolve_impl``), score
+        'auto' is unconditionally popcount: score operands are *both*
+        packed bit tensors, so the binary-native path saves the ±1 unpack
+        at every sequence length, prefill and decode alike."""
+        if self.score_impl not in SCORE_IMPLS:
+            raise ValueError(f"score_impl must be one of {SCORE_IMPLS}, "
+                             f"got {self.score_impl!r}")
+        return "popcount" if self.score_impl == "auto" else self.score_impl
+
     def _theta_int(self, params: Params) -> Array:
         """Integer SPS thresholds per q-head (or per head-row table)."""
         ak = self._repeat_kv(params["k_alpha"][None])[0]      # (H,)
@@ -611,7 +633,7 @@ class SPSAttention:
             else:
                 k_c, v_c, cols = k_bits_h, s_v_h, col_idx
             c = rbmm.rbmm_int(q_c, k_c, dh, scheme="xnor",
-                              impl=self.impl)    # (B,H,C,Kwin) int32
+                              impl=self._score_impl())  # (B,H,C,Kwin) int32
             th = self._theta_rows(theta, rows)[None]
             probs = (c >= th).astype(jnp.int32)
             m = self._mask(rows, cols, skv, window)[None, None]
@@ -701,7 +723,7 @@ class SPSAttention:
                              positions[:, None, :, None] - window)
         kc_h = self._repeat_kv(kc_old)
         c_pre = rbmm.rbmm_int(q_bits, kc_h, dh, scheme="xnor",
-                              impl="popcount")                 # (B,H,C,W)
+                              impl=self._score_impl())         # (B,H,C,W)
         probs_pre = jnp.where(m_pre, (c_pre >= th).astype(jnp.uint32),
                               jnp.uint32(0))
         probs_p = packing.pack_bits(probs_pre)                 # (B,H,C,W/32)
@@ -714,7 +736,7 @@ class SPSAttention:
         # intra-chunk causal block
         k_h = self._repeat_kv(k_bits)
         c_in = rbmm.rbmm_int(q_bits, k_h, dh, scheme="xnor",
-                             impl=self.impl)                   # (B,H,C,C)
+                             impl=self._score_impl())          # (B,H,C,C)
         i_idx = jnp.arange(c_len)
         m_in = (i_idx[None, :, None] >= i_idx[None, None, :]) & \
                (i_idx[None, None, :] < valid[:, None, None])
@@ -913,7 +935,8 @@ class SPSAttention:
         positions = jnp.arange(s)[None, :]
         q_bits, _, _ = self._project_qkv_deploy(params, x, positions)
         kc_h = self._repeat_kv(mem.k_bits)
-        c = rbmm.rbmm_int(q_bits, kc_h, dh, scheme="xnor", impl=self.impl)
+        c = rbmm.rbmm_int(q_bits, kc_h, dh, scheme="xnor",
+                          impl=self._score_impl())
         theta = self._theta_int(params)
         if self.sps_granularity == "row":
             th = self._theta_rows(theta, jnp.clip(positions[0], 0,
@@ -981,13 +1004,17 @@ class SPSAttention:
         if self.grouped_decode and self.groups > 1:
             g = self.groups
             qg = q_bits[:, :, 0].reshape(b, hkv, g, -1)       # (B,Hkv,G,dhp)
-            x = ~(qg[:, :, :, None, :] ^ kc[:, :, None, :, :])
-            pc = lax.population_count(x).astype(jnp.int32).sum(-1)
-            c = (2 * pc - jnp.int32(dh)).reshape(b, h, 1, w)  # (B,H,1,W)
+            # xnor_popcount_score carries the Eq. 7 pad correction
+            # (-(d_h + 2*pad)); the old inline ``2*pc - dh`` silently
+            # dropped it, shifting every score for d_h % 32 != 0 (pinned
+            # in tests/test_models_deploy.py)
+            c = packing.xnor_popcount_score(
+                qg[:, :, :, None, :], kc[:, :, None, :, :], dh
+            ).reshape(b, h, 1, w)                             # (B,H,1,W)
         else:
             kc_h = self._repeat_kv(kc)                        # (B,H,W,dhp)
             c = rbmm.rbmm_int(q_bits, kc_h, dh, scheme="xnor",
-                              impl="popcount")                # (B,H,1,W)
+                              impl=self._score_impl())        # (B,H,1,W)
         theta = self._theta_int(params)
         if self.sps_granularity == "row":
             row = jnp.clip(pos, 0, ROW_TABLE - 1)             # (B,)

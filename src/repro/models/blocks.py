@@ -42,6 +42,7 @@ def _attn_from_cfg(cfg: ModelConfig, *, cross: bool = False,
         cross=cross,
         dtype=jnp.dtype(cfg.compute_dtype),
         impl=cfg.binary.impl if cfg.binary.impl != "auto" else "auto",
+        score_impl=cfg.binary.score_impl,
         grouped_decode=cfg.decode_grouped_gqa,
         window_chunk=cfg.window_chunking,
         wo_partition="col" if cfg.binary.gather_bits_collectives else "row",

@@ -148,44 +148,68 @@ def test_rbmm_mxu_edge_shapes_smoke():
 # ---------------------------------------------------------------------------
 
 
-@given(st.integers(1, 4), st.integers(1, 150), st.sampled_from([32, 64, 96]),
+@given(st.integers(1, 4), st.integers(1, 150),
+       st.sampled_from([32, 48, 64, 96]),
        st.sampled_from(["vpu", "mxu"]), st.booleans(),
        st.sampled_from([32, 64, 96]), st.sampled_from([32, 64, 96]),
        st.integers(0, 2**31 - 1))
 @settings(max_examples=_budget(30), deadline=None)
 @pytest.mark.slow
 def test_sps_attn_fuzz(h, l, dh, path, causal, bq, bk, seed):
-    """Sequence lengths spanning non-multiples of every block size."""
+    """Sequence lengths spanning non-multiples of every block size and
+    d_h spanning non-multiples of the 32-bit word (48), three-way: fused
+    kernel == packed popcount ref == dense unpacked oracle."""
     rng = np.random.default_rng(seed)
     qv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
     kv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
     vv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
     qb = packing.pack_signs(jnp.asarray(qv))
     kb = packing.pack_signs(jnp.asarray(kv))
+    vt = sa_ref.v_transpose_packed(jnp.asarray(vv))
     theta = jnp.asarray(rng.integers(-6, 6, size=(h,)).astype(np.int32))
     want = sa_ref.sps_attention(qb, kb, jnp.asarray(vv), theta, d_h=dh,
                                 causal=causal)
-    v_in = (sa_ref.v_transpose_packed(jnp.asarray(vv)) if path == "vpu"
-            else jnp.asarray(vv, jnp.bfloat16))
+    pop = sa_ref.sps_attention_popcount(qb, kb, vt, theta, d_h=dh,
+                                        causal=causal)
+    np.testing.assert_array_equal(np.asarray(pop), np.asarray(want))
+    v_in = vt if path == "vpu" else jnp.asarray(vv, jnp.bfloat16)
     got = sa_ops.sps_attention(qb, kb, v_in, theta, d_h=dh, causal=causal,
                                path=path, bq=bq, bk=bk)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_sps_attn_edge_shapes_smoke():
+    """Tier-1 three-way smoke (kernel == popcount ref == dense oracle)
+    over non-multiple-of-block L AND non-multiple-of-32 d_h — the Eq. 7
+    pad correction ``-(d_h + 2*pad)`` is live for d_h=48."""
     rng = np.random.default_rng(2)
-    for h, l in [(1, 1), (2, 33), (3, 97)]:
-        qv = rng.choice([-1, 1], size=(h, l, 32)).astype(np.int32)
-        kv = rng.choice([-1, 1], size=(h, l, 32)).astype(np.int32)
-        vv = rng.choice([-1, 1], size=(h, l, 32)).astype(np.int32)
+    for h, l, dh in [(1, 1, 32), (2, 33, 48), (3, 97, 32), (2, 40, 48)]:
+        qv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
+        kv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
+        vv = rng.choice([-1, 1], size=(h, l, dh)).astype(np.int32)
         qb, kb = (packing.pack_signs(jnp.asarray(qv)),
                   packing.pack_signs(jnp.asarray(kv)))
+        vt = sa_ref.v_transpose_packed(jnp.asarray(vv))
         theta = jnp.zeros((h,), jnp.int32)
-        want = sa_ref.sps_attention(qb, kb, jnp.asarray(vv), theta, d_h=32)
-        got = sa_ops.sps_attention(qb, kb,
-                                   sa_ref.v_transpose_packed(jnp.asarray(vv)),
-                                   theta, d_h=32, bq=32, bk=32)
+        want = sa_ref.sps_attention(qb, kb, jnp.asarray(vv), theta, d_h=dh)
+        pop = sa_ref.sps_attention_popcount(qb, kb, vt, theta, d_h=dh)
+        np.testing.assert_array_equal(np.asarray(pop), np.asarray(want))
+        got = sa_ops.sps_attention(qb, kb, vt, theta, d_h=dh, bq=32, bk=32)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sps_attn_word_count_contract():
+    """The ops wrapper must reject operands whose packed word count
+    disagrees with ceil(d_h/32) instead of silently mis-scoring."""
+    rng = np.random.default_rng(3)
+    vv = rng.choice([-1, 1], size=(1, 8, 64)).astype(np.int32)
+    qb = packing.pack_signs(jnp.asarray(vv))          # (1, 8, 2) words
+    vt = sa_ref.v_transpose_packed(jnp.asarray(vv))
+    theta = jnp.zeros((1,), jnp.int32)
+    with pytest.raises(ValueError, match="ceil"):
+        sa_ops.sps_attention(qb, qb, vt, theta, d_h=32)   # needs 1 word
+    with pytest.raises(ValueError, match="ceil"):
+        sa_ops.sps_attention(qb[..., :1], qb, vt, theta, d_h=64)
 
 
 # ---------------------------------------------------------------------------
@@ -217,24 +241,37 @@ def test_pack_fuzz(m, k, ints, bm, bw, seed):
 # ---------------------------------------------------------------------------
 
 
+def _mask_pad_bits(words: np.ndarray, k: int) -> np.ndarray:
+    """Zero the pad bits of the last packed word (the pack_bits
+    guarantee random test operands must re-establish for k % 32 != 0;
+    without it the pad-corrected popcount paths and the dense unpack
+    refs legitimately diverge — they score different operands)."""
+    if k % packing.WORD:
+        words = words.copy()
+        words[..., -1] &= np.uint32((1 << (k % packing.WORD)) - 1)
+    return words
+
+
 @given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3),
-       st.sampled_from([32, 64]), st.sampled_from([32, 64]),
+       st.sampled_from([32, 48, 64]), st.sampled_from([32, 64]),
        st.integers(1, 4), st.integers(0, 2**31 - 1))
 @settings(max_examples=_budget(30), deadline=None)
 @pytest.mark.slow
 def test_paged_gather_decode_fuzz(b, hkv, groups, dh, page, nblk, seed):
     """Random arenas: trash-page entries, ragged lengths past the ring,
-    SWA rings shorter than the table capacity."""
+    SWA rings shorter than the table capacity, d_h spanning
+    non-multiples of the word (48).  Three-way: fused kernel == packed
+    popcount ref == dense unpacked oracle."""
     rng = np.random.default_rng(seed)
     h = hkv * groups
     pages = int(rng.integers(nblk, nblk + 4))
     ring = int(rng.choice([nblk * page, max(page, nblk * page - 16)]))
     dhp = packing.packed_len(dh)
-    u32 = lambda shape: jnp.asarray(
-        rng.integers(0, 2**32, shape, dtype=np.uint64).astype(np.uint32))
-    kp = u32((pages + 1, hkv, page, dhp))
-    vt = u32((pages + 1, hkv, dh, page // packing.WORD))
-    q = u32((b, h, dhp))
+    u32 = lambda shape: rng.integers(0, 2**32, shape,
+                                     dtype=np.uint64).astype(np.uint32)
+    kp = jnp.asarray(_mask_pad_bits(u32((pages + 1, hkv, page, dhp)), dh))
+    vt = jnp.asarray(u32((pages + 1, hkv, dh, page // packing.WORD)))
+    q = jnp.asarray(_mask_pad_bits(u32((b, h, dhp)), dh))
     bt = jnp.asarray(rng.integers(0, pages + 1, (b, nblk),
                                   dtype=np.int64).astype(np.int32))
     lens = jnp.asarray(rng.integers(0, ring + 20, (b,),
@@ -246,3 +283,24 @@ def test_paged_gather_decode_fuzz(b, hkv, groups, dh, page, nblk, seed):
     want = pa_ref.paged_gather_decode(q, kp, vt, bt, lens, jnp.int32(ring),
                                       th, d_h=dh)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    pop = pa_ref.paged_gather_decode_popcount(q, kp, vt, bt, lens,
+                                              jnp.int32(ring), th, d_h=dh)
+    np.testing.assert_array_equal(np.asarray(pop), np.asarray(want))
+
+
+def test_paged_gather_decode_word_count_contract():
+    """Mismatched packed word counts (or a non-word-multiple page size)
+    must raise, not silently shift scores."""
+    hkv, page, dhp = 1, 32, 2
+    kp = jnp.zeros((2, hkv, page, dhp), jnp.uint32)
+    vt = jnp.zeros((2, hkv, 64, page // packing.WORD), jnp.uint32)
+    q = jnp.zeros((1, 1, dhp), jnp.uint32)
+    bt = jnp.zeros((1, 1), jnp.int32)
+    lens = jnp.zeros((1,), jnp.int32)
+    th = jnp.zeros((1, 1), jnp.int32)
+    with pytest.raises(ValueError, match="ceil"):
+        pa_ops.paged_gather_decode(q, kp, vt, bt, lens, jnp.int32(page),
+                                   th, d_h=32)     # needs 1 word, carries 2
+    with pytest.raises(ValueError, match="page_size"):
+        pa_ops.paged_gather_decode(q, kp, vt[..., :0], bt, lens,
+                                   jnp.int32(page), th, d_h=64)

@@ -149,3 +149,39 @@ def test_pack_kernel_int_dtype():
     got = pack_ops.pack_threshold(jnp.asarray(x), jnp.asarray(theta))
     want = pack_ref.pack_threshold(jnp.asarray(x), jnp.asarray(theta))
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# shared dispatch (repro.kernels.interpret_mode)
+# ---------------------------------------------------------------------------
+
+
+def test_interpret_mode_env_override(monkeypatch):
+    """All five ops wrappers dispatch through one helper; the
+    REPRO_FORCE_INTERPRET env var forces either mode regardless of
+    backend (1 -> interpret, 0 -> compiled, unset -> non-TPU backends
+    interpret)."""
+    import jax as _jax
+    from repro import kernels
+
+    monkeypatch.setenv(kernels.FORCE_INTERPRET_ENV, "1")
+    assert kernels.interpret_mode() is True
+    monkeypatch.setenv(kernels.FORCE_INTERPRET_ENV, "0")
+    assert kernels.interpret_mode() is False
+    monkeypatch.delenv(kernels.FORCE_INTERPRET_ENV)
+    assert kernels.interpret_mode() is (_jax.default_backend() != "tpu")
+
+
+def test_interpret_mode_forced_still_correct(monkeypatch):
+    """A kernel forced into interpret mode still matches its oracle (the
+    override is a dispatch knob, not a numerics knob)."""
+    from repro import kernels
+
+    monkeypatch.setenv(kernels.FORCE_INTERPRET_ENV, "1")
+    rng = np.random.default_rng(11)
+    a = rng.choice([-1, 1], size=(3, 64)).astype(np.int32)
+    b = rng.choice([-1, 1], size=(5, 64)).astype(np.int32)
+    ap = packing.pack_signs(jnp.asarray(a))
+    bp = packing.pack_signs(jnp.asarray(b))
+    got = rbmm_ops.rbmm_int(ap, bp, 64)
+    np.testing.assert_array_equal(np.asarray(got), a @ b.T)

@@ -111,3 +111,62 @@ def test_deploy_weights_are_packed():
     latent = matmul_bytes(params, "w_latent")
     packed = matmul_bytes(dparams, "w_packed")
     assert packed * 100 < latent * 4  # >= 25x smaller
+
+
+# ---------------------------------------------------------------------------
+# deploy score-path impls (PR 6: binary-native popcount scoring)
+# ---------------------------------------------------------------------------
+
+
+def _mini_attn(**kw):
+    from repro.models.attention import SPSAttention
+    return SPSAttention(d_model=64, num_heads=4, num_kv_heads=2, **kw)
+
+
+@pytest.mark.parametrize("dh", [32, 48])
+def test_score_impl_paths_identical(dh):
+    """popcount == mxu == dense deploy scores, prefill AND decode — the
+    popcount path (the "auto" default) is exact, never approximate, so
+    switching score_impl can never move accuracy numbers.  dh=48 keeps
+    the Eq. 7 pad correction live."""
+    from repro.models.attention import SPSAttention  # noqa: F401
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 12, 64)), np.float32)
+    step = jnp.asarray(rng.normal(size=(2, 1, 64)), np.float32)
+    outs, decs = {}, {}
+    for si in ("popcount", "mxu", "dense", "auto"):
+        attn = _mini_attn(head_dim=dh, score_impl=si)
+        params = attn.convert(attn.init(jax.random.PRNGKey(0)))
+        outs[si], cache = attn.deploy_prefill(params, x, cache_size=16)
+        decs[si], _ = attn.deploy_decode(params, step, cache)
+    for si in ("mxu", "dense", "auto"):
+        np.testing.assert_array_equal(np.asarray(outs["popcount"]),
+                                      np.asarray(outs[si]))
+        np.testing.assert_array_equal(np.asarray(decs["popcount"]),
+                                      np.asarray(decs[si]))
+
+
+def test_score_impl_invalid_raises():
+    attn = _mini_attn(head_dim=32, score_impl="fpga")
+    params = attn.convert(attn.init(jax.random.PRNGKey(0)))
+    x = jnp.zeros((1, 4, 64), jnp.float32)
+    with pytest.raises(ValueError, match="score_impl"):
+        attn.deploy_prefill(params, x)
+
+
+@pytest.mark.parametrize("dh", [32, 48])
+def test_grouped_decode_pad_correction(dh):
+    """grouped_decode == ungrouped decode bitwise.  dh=48 pins the fixed
+    bug: the grouped score path used ``2*pc - d_h`` without the
+    ``+ 2*pad`` Eq. 7 term, silently shifting every score whenever
+    d_h % 32 != 0."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(2, 10, 64)), np.float32)
+    step = jnp.asarray(rng.normal(size=(2, 1, 64)), np.float32)
+    a_g = _mini_attn(head_dim=dh, grouped_decode=True)
+    a_u = _mini_attn(head_dim=dh, grouped_decode=False)
+    params = a_g.convert(a_g.init(jax.random.PRNGKey(0)))
+    _, cache = a_u.deploy_prefill(params, x, cache_size=16)
+    og, _ = a_g.deploy_decode(params, step, cache)
+    ou, _ = a_u.deploy_decode(params, step, cache)
+    np.testing.assert_array_equal(np.asarray(og), np.asarray(ou))

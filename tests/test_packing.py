@@ -40,6 +40,44 @@ def test_dc_count_true_region(k, seed):
     np.testing.assert_array_equal(np.asarray(dc), want)
 
 
+def test_dc_count_exact_for_non_word_multiple_k():
+    """Pin of the docstring claim: under A-pad-0, ``K - popcount`` is
+    exact for EVERY K — no pad subtraction — including K % 32 != 0 with
+    an all-ones true region (the case a wrong pad term would shift)."""
+    for k in (1, 31, 33, 48, 95):
+        u = np.ones((2, k), np.uint32)
+        packed = packing.pack_bits(jnp.asarray(u), pad_value=0)
+        np.testing.assert_array_equal(
+            np.asarray(packing.dc_count(packed, k)), np.zeros((2,)))
+        z = np.zeros((2, k), np.uint32)
+        packed = packing.pack_bits(jnp.asarray(z), pad_value=0)
+        np.testing.assert_array_equal(
+            np.asarray(packing.dc_count(packed, k)), np.full((2,), k))
+
+
+@given(st.integers(1, 130), st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_xnor_popcount_score_is_signed_dot(k, seed):
+    """``xnor_popcount_score`` == the ±1 dot product for every K — the
+    Eq. 7 ``-(K + 2*pad)`` correction exactly cancels the pad-bit
+    XNOR(0,0)=1 contributions."""
+    rng = np.random.default_rng(seed)
+    a = rng.choice([-1, 1], size=(3, k)).astype(np.int32)
+    b = rng.choice([-1, 1], size=(5, k)).astype(np.int32)
+    ap = packing.pack_signs(jnp.asarray(a))
+    bp = packing.pack_signs(jnp.asarray(b))
+    got = packing.xnor_popcount_score(ap[:, None, :], bp[None, :, :], k)
+    np.testing.assert_array_equal(np.asarray(got), a @ b.T)
+
+
+def test_xnor_popcount_score_word_count_contract():
+    ap = packing.pack_signs(jnp.ones((2, 64)))        # 2 words
+    with pytest.raises(ValueError, match="disagree"):
+        packing.xnor_popcount_score(ap, ap[:, :1], 64)
+    with pytest.raises(ValueError, match="ceil"):
+        packing.xnor_popcount_score(ap, ap, 32)       # 32 needs 1 word
+
+
 def test_pad_values_respected():
     bits = jnp.ones((1, 5), jnp.uint32)
     p0 = packing.pack_bits(bits, pad_value=0)
