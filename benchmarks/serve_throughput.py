@@ -6,14 +6,16 @@ Replays the same mixed short/long request trace through the schedulers:
               its longest prompt and decodes in lockstep until the LAST
               member finishes (the classic static-batch bubble).
   continuous  slot-pool engine on contiguous rings: retirement frees a
-              slot immediately and the queue backfills it, but admission
-              waves prefill WHOLE prompts — one long prompt stalls every
-              decoding slot for its entire prefill.
+              slot immediately and the queue backfills it.  Whole prompts
+              load in ONE unified iteration (decode rows ride the same
+              pooled forward), so a long prompt stretches that
+              iteration's wall-clock for everyone sharing it.
   chunked     continuous + ``prefill_chunk``: long prompts stream in one
-              fixed-size chunk per engine iteration, interleaved with
-              pooled decode steps, so short requests keep emitting tokens
-              (and admit without padding to the long prompt) — the TTFT
-              columns are where this shows.
+              fixed-size chunk per unified iteration instead, bounding
+              per-iteration work, so short requests keep emitting tokens
+              at decode cadence — the TTFT columns are where this shows.
+              Every engine iteration is exactly one jit dispatch either
+              way (the dispatches-per-iteration column pins it).
   paged       slot-pool engine on the page arena: slots own only the
               pages their tokens occupy, the arena is sized to a fraction
               of the contiguous footprint (--pages-frac), and exhaustion
@@ -173,7 +175,12 @@ def run_continuous(eng: ServeEngine, reqs):
               "page_fragmentation", "preemptions", "peak_page_bytes",
               "prefix_hit_rate", "prefix_hits", "cow_copies",
               "spec_steps", "spec_accept_rate", "spec_tokens_per_step",
-              "pages_freed_rollback", "pages_freed_retire"):
+              "pages_freed_rollback", "pages_freed_retire",
+              # one-kernel-iteration discipline: jit calls per engine
+              # iteration (pinned at 1.0) and trace counts (the compile
+              # budget the pow2 width buckets bound)
+              "iterations", "dispatches_per_iteration",
+              "unified_compiles", "engine_compiles"):
         if k in report:
             out[k] = report[k]
     return out
@@ -275,6 +282,9 @@ def main(argv=None):
                       f"{r['spec_tokens_per_step']:.2f} tok/verify-step  "
                       f"rollback-frees {r['pages_freed_rollback']:.0f}")
         step = f"  iter {r['iter_ms']:6.1f}ms" if "iter_ms" in r else ""
+        if "dispatches_per_iteration" in r:
+            step += (f"  {r['dispatches_per_iteration']:.0f} disp/iter  "
+                     f"{r['engine_compiles']:.0f} compiles")
         print(f"  {name:11s} {r['tokens']:5d} tok  {r['seconds']:6.2f}s "
               f"(+{r['warmup_s']:5.2f}s warmup)  "
               f"{r['tokens_per_s']:7.1f} tok/s  "

@@ -876,19 +876,28 @@ class SPSAttention:
     # -- deploy: speculative verify (attend-only) + deferred commit ----------
 
     def deploy_verify_chunk(self, params: Params, x: Array, cache, *,
-                            window=None, start: Optional[Array] = None
+                            window=None, start: Optional[Array] = None,
+                            valid: Optional[Array] = None
                             ) -> Tuple[Array, Tuple[Array, Array]]:
         """Score a candidate chunk WITHOUT writing the cache.
 
         x (B, C, d) holds the pending token + the drafted tokens of each
         sequence; the attend is the same prefix-plus-intra-block path as
-        ``deploy_prefill_chunk`` (every row is real), but the ring write
-        is deferred: the method returns (out, (k_bits, s_v)) so the
-        caller can decide per sequence how many leading positions to
-        commit (``commit_chunk``) once acceptance is known.  Never
-        touching the cache before acceptance is what makes speculative
-        rollback exact even on wrapped SWA rings, where a write destroys
-        the evicted token irrecoverably."""
+        ``deploy_prefill_chunk``, but the ring write is deferred: the
+        method returns (out, (k_bits, s_v)) so the caller can decide per
+        sequence how many leading positions to commit (``commit_chunk``)
+        once acceptance is known.  Never touching the cache before
+        acceptance is what makes speculative rollback exact even on
+        wrapped SWA rings, where a write destroys the evicted token
+        irrecoverably.
+
+        ``valid`` (B,) marks the real leading positions per row (default:
+        all C).  Real queries sit before ``valid`` so causal masking
+        already hides the garbage tail from them; passing ``valid``
+        additionally zeroes garbage keys out of the intra-chunk score
+        block, letting prefill-chunk rows share a pooled verify forward
+        with decode rows (their committed outputs stay bit-identical to
+        ``deploy_prefill_chunk``)."""
         if self.cross:
             raise ValueError("speculative verify is causal self-attention "
                              "only (cross-attention memory is static)")
@@ -896,7 +905,10 @@ class SPSAttention:
         if start is None:
             start = cache.length
         start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
-        valid = jnp.full((b,), c_len, jnp.int32)
+        if valid is None:
+            valid = jnp.full((b,), c_len, jnp.int32)
+        else:
+            valid = jnp.broadcast_to(jnp.asarray(valid, jnp.int32), (b,))
         positions = start[:, None] + jnp.arange(c_len)[None, :]
         q_bits, k_bits, s_v = self._project_qkv_deploy(params, x, positions)
         kc_old, vc_old, ring = self._cache_ring_view(cache)

@@ -259,38 +259,60 @@ class Block:
                              ) -> Tuple[Array, Dict[str, Any]]:
         """Cache-resuming chunk prefill: x (B, C, d) continues sequences
         whose first ``start`` tokens already live in ``cache`` (see
-        SPSAttention.deploy_prefill_chunk).  Attention-only blocks —
-        recurrent state (mamba/xLSTM) has no chunk-resume face yet, so
-        the serve engine prefills those families whole."""
-        if self.kind != "attn":
+        SPSAttention.deploy_prefill_chunk).  Recurrent kinds resume via
+        their carry state (``state=`` on the cell's apply): the conv
+        window / scan carry is seeded from the cache and the updated
+        carry written back, so hybrid/ssm chunks are bit-identical to a
+        whole-prompt prefill.  Rows with ``valid_len == 0`` freeze every
+        carry and write no attention bits — an inactive-row no-op, which
+        is what lets prefill chunks share one pooled forward with decode
+        slots.  Enc-dec blocks (kind="dec") have no chunk face."""
+        if self.kind == "dec":
             raise ValueError(
-                f"chunked prefill resumes attention caches only, not "
-                f"kind={self.kind!r} (recurrent families prefill whole "
-                f"prompts)")
+                "chunked prefill does not support enc-dec decoder blocks "
+                f"(kind={self.kind!r})")
         cfg = self.cfg
         parts = self._parts()
         norm = nn.make_norm(cfg.norm, cfg.d_model)
         h = norm.apply(params["norm1"], x)
         h = constrain(h, "batch", None, None)
-        a_out, kv = parts["attn"].deploy_prefill_chunk(
-            params["attn"], h, cache["attn"], window=self.window or None,
-            start=start, valid_len=valid_len)
-        x = x + a_out
-        if "ffn" in parts:
-            h2 = norm.apply(params["norm2"], x)
-            x = x + parts["ffn"].apply_deploy(params["ffn"], h2)
         new_cache = dict(cache)
-        new_cache["attn"] = kv
+        if self.kind in ("attn", "hybrid"):
+            a_out, kv = parts["attn"].deploy_prefill_chunk(
+                params["attn"], h, cache["attn"], window=self.window or None,
+                start=start, valid_len=valid_len)
+            new_cache["attn"] = kv
+            if self.kind == "hybrid":
+                m_out, mc = parts["mamba"].apply(
+                    params["mamba"], h, deploy=True, return_state=True,
+                    seq_lens=valid_len, state=cache["mamba"])
+                new_cache["mamba"] = mc
+                a_out = 0.5 * (a_out + m_out)
+            x = x + a_out
+            if "ffn" in parts:
+                h2 = norm.apply(params["norm2"], x)
+                x = x + parts["ffn"].apply_deploy(params["ffn"], h2)
+        else:  # mlstm / slstm
+            out, cc = parts["cell"].apply(
+                params["cell"], h, deploy=True, return_state=True,
+                seq_lens=valid_len, state=cache["cell"])
+            new_cache["cell"] = cc
+            x = x + out
         return constrain(x, "batch", None, None), new_cache
 
     def deploy_verify_chunk(self, params: Params, x: Array,
-                            cache: Dict[str, Any], *, start=None
-                            ) -> Tuple[Array, Any]:
+                            cache: Dict[str, Any], *, start=None,
+                            valid=None) -> Tuple[Array, Any]:
         """Speculative verify: run the block over a candidate chunk
         WITHOUT writing the cache, returning (out, attn projections) so
         ``commit_chunk`` can later write only the accepted prefix (see
-        SPSAttention.deploy_verify_chunk).  Attention-only blocks, like
-        chunked prefill."""
+        SPSAttention.deploy_verify_chunk).  Attention-only blocks.
+
+        ``valid`` (B,) marks how many leading chunk positions are real
+        per row; trailing garbage keys are masked out of the intra-chunk
+        attend so prefill rows can ride a pooled verify forward (causal
+        masking already protects real queries — ``valid`` makes the
+        row-mode explicit and keeps garbage out of the score stats)."""
         if self.kind != "attn":
             raise ValueError(
                 f"speculative verify resumes attention caches only, not "
@@ -303,7 +325,7 @@ class Block:
         h = constrain(h, "batch", None, None)
         a_out, proj = parts["attn"].deploy_verify_chunk(
             params["attn"], h, cache["attn"], window=self.window or None,
-            start=start)
+            start=start, valid=valid)
         x = x + a_out
         if "ffn" in parts:
             h2 = norm.apply(params["norm2"], x)

@@ -383,7 +383,8 @@ class LMModel:
 
     def verify_with_cache(self, dparams: Params, tokens: Array,
                           caches: List[Dict[str, Any]], *,
-                          start: Optional[Array] = None
+                          start: Optional[Array] = None,
+                          valid: Optional[Array] = None
                           ) -> Tuple[Array, List[Any]]:
         """Speculative verify forward: score a (B, C) candidate chunk —
         the pending token plus C-1 drafted tokens per sequence — against
@@ -401,12 +402,13 @@ class LMModel:
                              "decoders")
         x = self._embed_tokens(dparams, tokens, None)
         st = None if start is None else jnp.asarray(start, jnp.int32)
+        vl = None if valid is None else jnp.asarray(valid, jnp.int32)
         projs: List[Any] = []
         for i, (kind, w) in enumerate(self.plan):
             bp = (jax.tree.map(lambda t: t[i], dparams["blocks"])
                   if self.uniform else dparams["blocks"][i])
             x, proj = self._block(kind, w).deploy_verify_chunk(
-                bp, x, caches[i], start=st)
+                bp, x, caches[i], start=st, valid=vl)
             projs.append(proj)
         return self._logits(dparams, x), projs
 
@@ -453,6 +455,35 @@ class LMModel:
         ``paged.capacity`` for full-attention layers."""
         return [self._block(kind, w).init_cache(batch, max_len, paged=paged)
                 for kind, w in self.plan]
+
+    def reset_recurrent_rows(self, caches: List[Dict[str, Any]],
+                             fresh: Array) -> List[Dict[str, Any]]:
+        """Zero the recurrent carries (mamba conv/h, xLSTM c/n/m) of the
+        pool rows marked by ``fresh`` (B,) bool back to their
+        ``init_cache`` values (NOT plain zeros — sLSTM's normalizer and
+        the max-gate stabilizers init off-zero), leaving other rows
+        untouched.  Attention rings need no per-row reset: a chunk
+        starting at ``start == 0`` masks every stale slot (t_old < 0)
+        and its first write overwrites the length.  Pure ``where``
+        scatters, so it runs inside the pooled engine jit — a fresh
+        admission costs no extra dispatch."""
+        fresh = jnp.asarray(fresh, bool)
+        b = fresh.shape[0]
+        out: List[Dict[str, Any]] = []
+        for (kind, w), cache in zip(self.plan, caches):
+            if kind in ("hybrid", "mlstm", "slstm"):
+                init = self._block(kind, w).init_cache(b, 1)
+                new = dict(cache)
+                for name in ("mamba", "cell"):
+                    if name in cache:
+                        new[name] = jax.tree.map(
+                            lambda o, z: jnp.where(
+                                fresh.reshape((-1,) + (1,) * (o.ndim - 1)),
+                                z, o),
+                            cache[name], init[name])
+                cache = new
+            out.append(cache)
+        return out
 
     def decode_step(self, dparams: Params, token: Array,
                     caches: List[Dict[str, Any]]

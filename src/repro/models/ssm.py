@@ -63,6 +63,24 @@ def _freeze_cache(new: XLSTMCache, old: XLSTMCache, live_t: Array
         for n, o in zip(new, old)])
 
 
+def _scan_cells(cell, carry: XLSTMCache, seqs, live: Array
+                ) -> Tuple[XLSTMCache, Array]:
+    """Run an xLSTM ``cell`` over time-major inputs under one lax.scan.
+
+    BOTH ``apply`` and ``decode_step`` route through this helper (decode
+    is the L=1 case) so the cell update is always the SAME compiled scan
+    body: inlining the recurrence eagerly lets XLA fuse the multiply-adds
+    differently (fma vs mul+add) and drift the carry by one ulp, breaking
+    decode == width-1-chunk bit-identity."""
+    def step(c, ins):
+        *cell_in, m_t = ins
+        new, h = cell(c, tuple(cell_in))
+        return _freeze_cache(new, c, m_t), h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (*seqs, live))
+    return lax.scan(step, carry, xs)
+
+
 # ---------------------------------------------------------------------------
 # Mamba
 # ---------------------------------------------------------------------------
@@ -182,23 +200,34 @@ class MambaBlock:
 
     def apply(self, params: Params, x: Array, *, deploy: bool = False,
               return_state: bool = False,
-              seq_lens: Optional[Array] = None):
+              seq_lens: Optional[Array] = None,
+              state: Optional[MambaCache] = None):
         """x: (B, L, d) -> (B, L, d) [, MambaCache for decode continuation].
 
         ``seq_lens`` (B,) supports right-padded ragged batches: the SSM
         state freezes at each sequence's true length and the conv/state
-        caches are read there, not at the padded end."""
+        caches are read there, not at the padded end.
+
+        ``state`` resumes a prior chunk: the conv window is seeded from
+        ``state.conv`` (instead of zero padding) and the scan carry from
+        ``state.h``, so a prompt split into chunks produces bit-identical
+        outputs and final state to one whole-sequence call."""
         b, l, _ = x.shape
         di = self.d_inner
         xz = _proj(self._in_proj(), params["in_proj"], x, deploy)
         u, z = jnp.split(xz, 2, axis=-1)
         # depthwise causal conv over time (fp)
         pad = self.conv_width - 1
-        u_p = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+        if state is None:
+            u_p = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+            h0 = jnp.zeros((b, di, self.state_size), jnp.float32)
+        else:
+            u_p = jnp.concatenate(
+                [jnp.swapaxes(state.conv, 1, 2).astype(u.dtype), u], axis=1)
+            h0 = state.h
         u_c = sum(u_p[:, i:i + l] * params["conv_w"][i]
                   for i in range(self.conv_width)) + params["conv_b"]
         u_c = jax.nn.silu(u_c)
-        h0 = jnp.zeros((b, di, self.state_size), jnp.float32)
         y, h_last = self._scan(params, u_c, h0, seq_lens=seq_lens)
         y = y * jax.nn.silu(z)
         out = _proj(self._out_proj(), params["out_proj"],
@@ -232,15 +261,18 @@ class MambaBlock:
         xz = _proj(self._in_proj(), params["in_proj"], x, deploy)
         u, z = jnp.split(xz[:, 0], 2, axis=-1)             # (B, di)
         hist = jnp.concatenate([cache.conv, u[..., None]], axis=-1)
-        u_c = jnp.einsum("bdw,wd->bd", hist,
-                         params["conv_w"]) + params["conv_b"]
+        # left-to-right tap sum, matching ``apply``'s conv op order exactly
+        # (an einsum contracts in a different order and drifts in the last
+        # ulp, breaking decode == width-1-chunk bit-identity)
+        u_c = sum(hist[:, :, i] * params["conv_w"][i]
+                  for i in range(self.conv_width)) + params["conv_b"]
         u_c = jax.nn.silu(u_c)
-        a = -jnp.exp(params["a_log"])
-        dt, bb, cc = self._ssm_params(params, u_c)
-        da = jnp.exp(dt[..., None] * a[None])
-        h = da * cache.h + dt[..., None] * bb[:, None, :] * u_c[..., None]
-        y = jnp.einsum("bds,bs->bd", h, cc) + u_c * params["d_skip"]
-        y = y * jax.nn.silu(z)
+        # route the state update through the SAME scan body as ``apply``
+        # (L=1): inlining ``da*h + dbu`` here lets XLA fuse it differently
+        # (fma vs mul+add) than inside the scan, drifting h by one ulp and
+        # breaking decode == width-1-chunk bit-identity
+        y, h = self._scan(params, u_c[:, None], cache.h)
+        y = y[:, 0] * jax.nn.silu(z)
         out = _proj(self._out_proj(), params["out_proj"],
                     y[:, None].astype(self.dtype), deploy)
         return out, MambaCache(hist[..., 1:], h)
@@ -339,19 +371,13 @@ class MLSTMBlock:
 
     def apply(self, params: Params, x: Array, *, deploy: bool = False,
               return_state: bool = False,
-              seq_lens: Optional[Array] = None):
+              seq_lens: Optional[Array] = None,
+              state: Optional[XLSTMCache] = None):
         b, l, _ = x.shape
         q, k, v, ig, fg = self._qkv_gates(params, x, deploy)
-        cache0 = self.init_cache(b)
+        cache0 = self.init_cache(b) if state is None else state
         live = _live_mask(b, l, seq_lens)
-
-        def step(carry, ins):
-            *qkvg, m_t = ins
-            new, h_out = self._cell(carry, tuple(qkvg))
-            return _freeze_cache(new, carry, m_t), h_out
-
-        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, ig, fg, live))
-        last, hs = lax.scan(step, cache0, xs)
+        last, hs = _scan_cells(self._cell, cache0, (q, k, v, ig, fg), live)
         hs = jnp.moveaxis(hs, 0, 1).reshape(b, l, self.d_inner)
         out = _proj(self._out(), params["out"], hs.astype(self.dtype),
                     deploy)
@@ -361,10 +387,10 @@ class MLSTMBlock:
                     deploy: bool = True) -> Tuple[Array, XLSTMCache]:
         b = x.shape[0]
         q, k, v, ig, fg = self._qkv_gates(params, x, deploy)
-        cache, h_out = self._cell(cache, (q[:, 0], k[:, 0], v[:, 0],
-                                          ig[:, 0], fg[:, 0]))
+        cache, hs = _scan_cells(self._cell, cache, (q, k, v, ig, fg),
+                                _live_mask(b, 1, None))
         out = _proj(self._out(), params["out"],
-                    h_out.reshape(b, 1, self.d_inner).astype(self.dtype),
+                    hs[0].reshape(b, 1, self.d_inner).astype(self.dtype),
                     deploy)
         return out, cache
 
@@ -428,18 +454,14 @@ class SLSTMBlock:
 
     def apply(self, params: Params, x: Array, *, deploy: bool = False,
               return_state: bool = False,
-              seq_lens: Optional[Array] = None):
+              seq_lens: Optional[Array] = None,
+              state: Optional[XLSTMCache] = None):
         b, l, _ = x.shape
         z, ig, fg, og = self._zifo(params, x, deploy)
         live = _live_mask(b, l, seq_lens)
-
-        def step(carry, ins):
-            *zifo, m_t = ins
-            new, h = self._cell(carry, tuple(zifo))
-            return _freeze_cache(new, carry, m_t), h
-
-        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (z, ig, fg, og, live))
-        last, hs = lax.scan(step, self.init_cache(b), xs)
+        last, hs = _scan_cells(
+            self._cell, self.init_cache(b) if state is None else state,
+            (z, ig, fg, og), live)
         hs = jnp.moveaxis(hs, 0, 1)
         out = _proj(self._out(), params["out_proj"],
                     hs.astype(self.dtype), deploy)
@@ -449,7 +471,8 @@ class SLSTMBlock:
                     deploy: bool = True) -> Tuple[Array, XLSTMCache]:
         b = x.shape[0]
         z, ig, fg, og = self._zifo(params, x, deploy)
-        cache, h = self._cell(cache, (z[:, 0], ig[:, 0], fg[:, 0], og[:, 0]))
+        cache, hs = _scan_cells(self._cell, cache, (z, ig, fg, og),
+                                _live_mask(b, 1, None))
         out = _proj(self._out(), params["out_proj"],
-                    h[:, None].astype(self.dtype), deploy)
+                    jnp.moveaxis(hs, 0, 1).astype(self.dtype), deploy)
         return out, cache

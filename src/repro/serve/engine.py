@@ -7,68 +7,96 @@ packed uint32 K/V^T caches update in place):
               once, then decode steps run lockstep to a fixed horizon.
   continuous  ``generate([variable-length prompts])`` / ``serve(requests)``
               — a priority/FIFO scheduler admits requests into a fixed
-              pool of cache slots.  Admission waves prefill together
-              (ragged right-padded with per-sequence length masks for pure
-              attention stacks; per-request for recurrent-state families),
-              are scattered into free slots, and join the SINGLE pooled
-              decode step already serving earlier requests — per-slot ring
-              positions live in the cache itself (KVCache.length is
-              per-sequence).  Slots retire on EOS or token budget and are
-              backfilled from the waiting queue on the next step.
+              pool of cache slots.  Admission is host-side bookkeeping
+              only: every request (all five model families) becomes an
+              in-flight prefill row, and ONE pooled forward per engine
+              iteration advances every in-flight stream at once.  Slots
+              retire on EOS or token budget and are backfilled from the
+              waiting queue on the next iteration.
 
-With ``ServeConfig.paged`` the per-slot full-length rings are replaced by a
-shared page arena + per-slot block tables (repro.models.attention
+The unified iteration is the engine's core invariant: each pass of the
+serve loop issues exactly ONE jit dispatch.  Iterations with any
+in-flight prefill run the pooled chunk-continuation forward
+(``LM.prefill_with_cache`` with ``caches=``) over the WHOLE slot pool —
+prefill rows carry their next chunk (``valid = n`` real tokens), decode
+rows ride as width-1 chunks (their pending token, ``valid = 1``), and
+empty slots are inactive rows (``valid = 0``: no cache write, frozen
+recurrent carries).  The per-row ``(start, valid, fresh)`` vectors are
+the mode mask: ``start`` is the cached prefix length, ``valid`` the live
+chunk width, and ``fresh`` (start == 0 with valid > 0) resets recurrent
+carries to their init values inside the same jit.  Decode rows are
+bit-identical to the dedicated decode step (integer-exact binary
+attention makes chunk partial sums associative; decode == width-1 chunk),
+so WHICH iterations are mixed never changes tokens.  Pure-decode
+iterations keep the dedicated pooled decode (or speculative verify) step
+— still one dispatch.  Dispatches per iteration are therefore 1 instead
+of O(in-flight prefills), and compile count stays O(log max_prompt):
+chunked configs trace one fixed width, unchunked configs trace
+power-of-two width buckets.
+
+With ``ServeConfig.paged`` the per-slot full-length rings are replaced by
+a shared page arena + per-slot block tables (repro.models.attention
 PagedKVCache): short requests return pages the moment they retire, long
 requests grow past the old ``max_len`` ring cap (up to ``max_blocks *
 page_size``), and when the arena is exhausted the engine *preempts* the
 lowest-priority slot back to the scheduler queue (recompute-on-resume)
-instead of deadlocking.  Decode stays ONE jit'd pooled step — block-table
-gathers resolve each slot's pages inside it (or the fused
-repro.kernels.paged_attn kernel does, with ``BinaryConfig.paged_kernel``).
+instead of deadlocking.  Block-table gathers resolve each slot's pages
+inside the pooled step (or the fused repro.kernels.paged_attn kernel
+does, with ``BinaryConfig.paged_kernel``).
 
 ``ServeConfig.prefix_share`` (default on, paged mode) adds prefix sharing
 on top: admission hash-conses every full prompt page (chain digests over
 the token prefix that deterministically produces the page's packed K/V^T
 words), so requests opening with the same system prompt ADOPT one shared,
-refcounted copy of those pages instead of allocating their own.  Writes
-that would diverge a shared page copy-on-write behind the other readers'
-backs (the pre-decode sweep), sole-owner divergent writes retire the hash
-key, and pages free only when their last reader leaves — output stays
-token-for-token identical to the unshared paths while peak mapped pages
-drop by the shared-prefix footprint per extra sharer.
+refcounted copy of those pages instead of allocating their own.  Decode
+writes that would diverge a shared page copy-on-write behind the other
+readers' backs (the pre-step sweep); prefill-chunk writes need no COW —
+a chunk rewrites exactly the bits its page key promises (equal keys =>
+bitwise-equal content), so sharers and the writer see identical pages
+either way.  Sole-owner divergent writes retire the hash key, and pages
+free only when their last reader leaves — output stays token-for-token
+identical to the unshared paths while peak mapped pages drop by the
+shared-prefix footprint per extra sharer.
 
-With ``ServeConfig.prefill_chunk`` admission becomes *chunked*: prompts
-longer than the chunk occupy a slot as an in-flight prefill and stream
-through ``LM.prefill_with_cache``'s cache-continuation mode one fixed-size
-chunk per engine iteration, INTERLEAVED with the pooled decode step — so
-occupied slots keep emitting tokens while a long prompt loads and
-time-to-first-token stays bounded for the short requests sharing the pool.
-In-flight prefills are preemption-safe (eviction mid-prefill requeues the
-request; resume recomputes from the prompt) and grow their pages chunk by
-chunk in paged mode.
+With ``ServeConfig.prefill_chunk`` prompts longer than the chunk stream
+through the unified step one fixed-size chunk per iteration — decode
+slots keep emitting tokens in the SAME pooled forward while a long
+prompt loads, so time-to-first-token stays bounded for the short
+requests sharing the pool.  All five families chunk: attention resumes
+through the ring/block-table prefix attend, recurrent families resume
+through their carry state (``ssm.py`` ``state=``), both bit-identical to
+whole-prompt prefill at any chunk size.  In-flight prefills are
+preemption-safe (eviction mid-prefill requeues the request; resume
+recomputes from the prompt) and grow their pages chunk by chunk in paged
+mode.
 
-``ServeConfig.spec_decode`` layers self-speculative decoding on the same
-pooled step: a layer-truncated draft sharing the trunk's packed weights
-(or an independent small draft passed to the engine) proposes k tokens
-per slot per iteration, and ONE pooled verify forward — the chunk-prefill
-prefix attend over the ring/block-table caches — scores all k+1 positions
-at once.  The verify never writes the caches; acceptance (greedy exact-
-match, or rejection sampling for temperature/top_k so the output
-distribution is provably unchanged) picks each slot's accepted prefix and
-exactly that prefix commits, so rejected drafts roll back bit-exactly in
-every layout — wrapped SWA rings, shared pages (conservatively COW'd
-before the step) and in-flight chunked prefills included — and over-grown
-pages un-grow back to the arena (``PageArena.truncate``, counted apart
-from retirement frees).  Decode is bandwidth-bound on the binary datapath,
-so verifying k+1 tokens costs about one decode step of weight/cache
-traffic: accepted tokens amortize the pool's per-step memory traffic.
+``ServeConfig.spec_decode`` layers self-speculative decoding on the
+pure-decode iterations: a layer-truncated draft sharing the trunk's
+packed weights (or an independent small draft passed to the engine)
+proposes k tokens per slot per iteration, and ONE pooled verify forward
+— the chunk-prefill prefix attend over the ring/block-table caches —
+scores all k+1 positions at once.  The verify never writes the caches;
+acceptance (greedy exact-match, or rejection sampling for
+temperature/top_k so the output distribution is provably unchanged)
+picks each slot's accepted prefix and exactly that prefix commits, so
+rejected drafts roll back bit-exactly in every layout — wrapped SWA
+rings and shared pages (conservatively COW'd before the step) included —
+and over-grown pages un-grow back to the arena (``PageArena.truncate``,
+counted apart from retirement frees).  On mixed iterations decode slots
+advance one plain token through the unified forward while the draft
+caches ingest the same token in the same jit, so the draft state stays
+in lockstep without a second dispatch.  Decode is bandwidth-bound on the
+binary datapath, so verifying k+1 tokens costs about one decode step of
+weight/cache traffic: accepted tokens amortize the pool's per-step
+memory traffic.
 
 The binary cache is what makes deep pools cheap: each slot's decode state
 is 16-32x smaller than a bf16 KV cache (the paper's edge bandwidth story,
 transferred to serving), so slot count — i.e. serving concurrency — scales
 by the same factor at fixed memory.  ``cache_report`` surfaces the memory
-win, slot occupancy/utilization, page-arena occupancy/fragmentation and
-speculative accept rate / tokens-per-verify-step.
+win, slot occupancy/utilization, page-arena occupancy/fragmentation,
+speculative accept rate and the dispatch/compile discipline
+(``dispatches_per_iteration``, ``unified_compiles``).
 """
 from __future__ import annotations
 
@@ -111,14 +139,15 @@ class ServeConfig:
         to ``num_slots * max_blocks`` (fully provisioned — no preemption).
         Sizing it below that is safe: exhaustion preempts, never deadlocks.
       prefill_chunk: chunked/streamed prefill width in tokens (None =
-        whole-wave prefill).  Must be a positive multiple of 32 (the
-        uint32 packing word, so chunk boundaries never straddle a V^T
-        word).  Prompts longer than the chunk prefill one chunk per
-        engine iteration, interleaved with pooled decode steps —
-        token-for-token identical to whole-prompt prefill, but decoding
-        slots stay live while long prompts load.  Pure-attention stacks
-        only; recurrent families (hybrid/ssm) ignore it and prefill
-        whole prompts.
+        whole prompts load in one unified iteration).  Must be a positive
+        multiple of 32 (the uint32 packing word, so chunk boundaries
+        never straddle a V^T word).  Prompts longer than the chunk
+        stream one chunk per engine iteration THROUGH the pooled unified
+        forward, fused with the decode rows — token-for-token identical
+        to whole-prompt prefill, but decoding slots stay live while long
+        prompts load.  All model families chunk: attention stacks resume
+        through the cache-continuation attend, recurrent families
+        (hybrid/ssm) through their carry state.
       prefix_share: paged mode only — admission hash-conses full prompt
         pages (chain hashes over the token prefix, which deterministically
         produces the page's bit-packed K/V^T words) so requests with a
@@ -128,16 +157,16 @@ class ServeConfig:
         False keeps the PR 2 one-owner-per-page behavior (the escape
         hatch the benchmark compares against).
       spec_decode: self-speculative decoding — k drafted tokens per slot
-        per engine iteration, batch-verified in ONE pooled k+1-token
-        verify forward that reuses the chunk-prefill prefix attend.
-        Accepted prefixes commit to the caches; rejected tails are never
-        written (rollback is exact in every layout, wrapped SWA rings
-        included) and in paged mode over-grown pages un-grow back to the
-        arena.  Greedy output is bit-identical to plain decode;
-        temperature/top_k use rejection-sampling acceptance so the token
-        distribution is provably unchanged.  None disables.  Attention-
-        only stacks (recurrent families decode non-speculatively, like
-        ``prefill_chunk``).
+        per pure-decode iteration, batch-verified in ONE pooled
+        k+1-token verify forward that reuses the chunk-prefill prefix
+        attend.  Accepted prefixes commit to the caches; rejected tails
+        are never written (rollback is exact in every layout, wrapped
+        SWA rings included) and in paged mode over-grown pages un-grow
+        back to the arena.  Greedy output is bit-identical to plain
+        decode; temperature/top_k use rejection-sampling acceptance so
+        the token distribution is provably unchanged.  None disables.
+        Attention-only stacks (recurrent families decode
+        non-speculatively).
       spec_draft_layers: depth of the layer-truncated draft sharing the
         trunk's packed weights (clamped to the stack depth; a full-depth
         "draft" degenerates to the trunk itself and accepts everything).
@@ -275,11 +304,14 @@ class _SlotState:
 
 
 class _PrefillState:
-    """An in-flight chunked prefill occupying a pool slot.
+    """An in-flight prefill occupying a pool slot.
 
-    ``toks`` is prompt + pre-preemption tokens (``pre``); ``done`` counts
-    tokens already written to the slot's caches.  The slot joins the
-    decode pool only once every chunk has landed."""
+    EVERY admitted request passes through this state — short prompts for
+    one unified iteration, chunked long prompts for several.  ``toks`` is
+    prompt + pre-preemption tokens (``pre``); ``done`` counts tokens
+    already written to the slot's caches.  The slot joins the decode rows
+    once every chunk has landed (its first token is sampled by the same
+    unified forward that lands the last chunk)."""
 
     __slots__ = ("request", "toks", "pre", "done", "admit_seq")
 
@@ -293,7 +325,7 @@ class _PrefillState:
 
 
 def _pow2_bucket(n: int, lo: int = 16) -> int:
-    """Smallest power of two >= n (>= lo) — the fallback-prefill length
+    """Smallest power of two >= n (>= lo) — the unified-step width
     buckets that bound compile count to O(log max_prompt)."""
     b = lo
     while b < n:
@@ -317,10 +349,13 @@ class ServeEngine:
         self.draft_model = draft_model
         self.draft_dparams = draft_dparams
         self._decode_jit = None
-        self._chunk_jit = None
-        self._draft_chunk_jit = None
+        self._unified_jit = None
         self._spec_jit = None
-        self._fallback_jit = None
+        # trace-count probe: each counter increments INSIDE the traced
+        # function body, i.e. once per XLA compilation (shape bucket),
+        # never per dispatch — the dispatch-count regression test pins
+        # both axes of the one-kernel-iteration contract through these
+        self._compiles = {"unified": 0, "decode": 0, "spec": 0}
         self._sample = {
             "greedy": lambda lg, k: sampler_lib.greedy(lg),
             "temperature": lambda lg, k: sampler_lib.temperature(
@@ -329,10 +364,11 @@ class ServeEngine:
                 lg, k, cfg.top_k, cfg.temperature),
         }[cfg.sampler]
 
-    # -- decode step ------------------------------------------------------------
+    # -- decode step --------------------------------------------------------
 
     def _build_decode(self):
         def step(dparams, token, caches, key):
+            self._compiles["decode"] += 1
             logits, caches = self.model.decode_step(dparams, token, caches)
             key, sub = jax.random.split(key)
             nxt = self._sample(logits[:, -1:], sub)
@@ -340,31 +376,54 @@ class ServeEngine:
 
         self._decode_jit = jax.jit(step, donate_argnums=(2,))
 
-    def _build_chunk_step(self):
-        """One fixed-width prefill chunk for one pool slot: gather the
-        slot's cache rows, continue the prefill at offset ``start``
-        (``valid`` real tokens out of the chunk width), commit the rows
-        back.  slot/start/valid are traced (1,) arrays so every chunk of
-        every prompt reuses ONE compiled shape."""
+    # -- unified iteration ----------------------------------------------------
 
-        def step(dparams, toks, caches, slot, start, valid):
-            sub = kvcache.extract_slots(caches, slot)
-            logits, sub = self.model.prefill_with_cache(
-                dparams, toks, caches=sub, start=start, seq_lens=valid)
-            return logits, kvcache.writeback_slots(caches, sub, slot)
+    def _build_unified(self, with_draft: bool):
+        """ONE pooled forward that advances every in-flight stream.
 
-        self._chunk_jit = jax.jit(step, donate_argnums=(2,))
+        The whole slot pool rides the cache-continuation prefill — the
+        per-row ``(start, valid, fresh)`` vectors are the mode mask:
 
-    def _build_fallback(self):
-        """Jit'd per-request prefill for recurrent-family admission;
-        callers pad prompts to power-of-two buckets (``_pow2_bucket``) so
-        the compile count is O(log max_prompt), not O(#distinct lengths)."""
+          prefill chunk   start = tokens done,  valid = chunk width
+          decode          start = cache length, valid = 1 (pending token)
+          inactive        valid = 0 (no write, frozen recurrent carries)
 
-        def pre(dparams, toks, seq_lens, max_len):
-            return self.model.prefill_with_cache(
-                dparams, toks, max_len=max_len, seq_lens=seq_lens)
+        ``fresh`` rows (start == 0, valid > 0) reset their recurrent
+        carries to init values inside the same jit, so admission costs
+        no extra dispatch.  Logits come back at each row's last real
+        position, so the same sample serves decode rows AND the first
+        token of a prefill row landing its final chunk.  With a
+        speculative draft, the draft pool ingests the identical chunk in
+        the same trace so its cache stays in lockstep with the trunk —
+        still one dispatch."""
 
-        self._fallback_jit = jax.jit(pre, static_argnums=(3,))
+        def trunk(dparams, toks, caches, start, valid, fresh, key):
+            caches = self.model.reset_recurrent_rows(caches, fresh)
+            logits, caches = self.model.prefill_with_cache(
+                dparams, toks, caches=caches, start=start, seq_lens=valid)
+            key, sub = jax.random.split(key)
+            nxt = self._sample(logits, sub)
+            return nxt, caches, key
+
+        if with_draft:
+            def step(dparams, ddparams, toks, caches, dcaches, start,
+                     valid, fresh, key):
+                self._compiles["unified"] += 1
+                nxt, caches, key = trunk(dparams, toks, caches, start,
+                                         valid, fresh, key)
+                _, dcaches = self.draft_model.prefill_with_cache(
+                    ddparams, toks, caches=dcaches, start=start,
+                    seq_lens=valid)
+                return nxt, caches, dcaches, key
+
+            self._unified_jit = jax.jit(step, donate_argnums=(3, 4))
+        else:
+            def step(dparams, toks, caches, start, valid, fresh, key):
+                self._compiles["unified"] += 1
+                return trunk(dparams, toks, caches, start, valid, fresh,
+                             key)
+
+            self._unified_jit = jax.jit(step, donate_argnums=(2,))
 
     # -- speculative decode --------------------------------------------------
 
@@ -381,19 +440,6 @@ class ServeEngine:
         n = min(self.cfg.spec_draft_layers, self.model.cfg.num_layers)
         self.draft_model, self.draft_dparams = self.model.truncate_deploy(
             self.dparams, n)
-
-    def _build_draft_chunk_step(self):
-        """Chunk-prefill step for the DRAFT cache pool — the draft must
-        stream long prompts alongside the trunk so an in-flight prefill's
-        draft state is ready the moment the slot joins the decode pool."""
-
-        def step(ddparams, toks, dcaches, slot, start, valid):
-            sub = kvcache.extract_slots(dcaches, slot)
-            _, sub = self.draft_model.prefill_with_cache(
-                ddparams, toks, caches=sub, start=start, seq_lens=valid)
-            return kvcache.writeback_slots(dcaches, sub, slot)
-
-        self._draft_chunk_jit = jax.jit(step, donate_argnums=(2,))
 
     def _build_spec_step(self):
         """One pooled speculative iteration, ONE jit:
@@ -441,6 +487,7 @@ class ServeEngine:
 
         def step(dparams, ddparams, token, caches, dcaches, start, active,
                  key):
+            self._compiles["spec"] += 1
             b = token.shape[0]
             d_pre = [c["attn"] for c in dcaches if "attn" in c]
 
@@ -487,30 +534,7 @@ class ServeEngine:
 
         self._spec_jit = jax.jit(step, donate_argnums=(3, 4))
 
-    def _draft_admit(self, dcaches, reqs: List[Request],
-                     resumed: List[List[int]], slots: List[int],
-                     draft_len: int):
-        """Prefill an admission wave through the DRAFT stack and scatter
-        it into the draft pool (always contiguous rings — the draft pool
-        is a small fraction of the trunk's and is not paged).  Logits are
-        discarded: the first token after admission is sampled from the
-        TRUNK's prefill, the draft only needs the prompt in its cache."""
-        toks = [np.concatenate([np.asarray(r.tokens, np.int32),
-                                np.asarray(res, np.int32)])
-                for r, res in zip(reqs, resumed)]
-        lens = [len(t) for t in toks]
-        batch = np.zeros((len(reqs), max(lens)), np.int32)
-        for i, t in enumerate(toks):
-            batch[i, :lens[i]] = t
-        kw: Dict[str, Any] = {}
-        if len(set(lens)) > 1:
-            kw["seq_lens"] = np.asarray(lens, np.int32)
-        _, seq = self.draft_model.prefill_with_cache(
-            self.draft_dparams, jnp.asarray(batch), max_len=draft_len,
-            **kw)
-        return kvcache.insert_slots(dcaches, seq, slots)
-
-    # -- public API ---------------------------------------------------------------
+    # -- public API ---------------------------------------------------------
 
     def generate(self, prompts, *, max_new_tokens: int,
                  frontend_embeds: Optional[np.ndarray] = None,
@@ -586,8 +610,10 @@ class ServeEngine:
 
     @property
     def _ragged_ok(self) -> bool:
-        """Ragged (masked right-padded) prefill needs a pure attention
-        stack; recurrent state would scan over pad tokens."""
+        """Speculative decode needs a pure attention stack: the verify
+        forward scores candidates without writing state, and recurrent
+        carries have no deferred-write face.  (Chunked prefill has no
+        such gate — recurrent families chunk through their carry state.)"""
         plan = getattr(self.model, "plan", None)
         return plan is not None and {k for k, _ in plan} == {"attn"}
 
@@ -597,34 +623,27 @@ class ServeEngine:
         return [spec.ring_for(w) if kind in ("attn", "hybrid") else None
                 for kind, w in getattr(self.model, "plan", [])]
 
-    def _sync_tables(self, caches, arenas, rings, mask_rows: Sequence[int] = ()):
+    def _sync_tables(self, caches, arenas, rings):
         """Push dirty host-side block tables into the device caches.
 
         Each layer gets its OWN device copy of its arena's table: the
-        caches pytree is donated into the jit'd decode step, and donation
-        rejects the same buffer appearing in two leaves.
-
-        ``mask_rows`` zeroes those slots' rows in the DEVICE copy only
-        (host tables stay authoritative): mid-prefill slots ride through
-        the pooled decode step as garbage rows, and with prefix sharing
-        their one stale write per iteration must land on the trash page
-        instead of a page other readers share.  A masked push leaves the
-        arenas dirty so the next sync restores the real tables."""
-        mask_rows = list(mask_rows)
-        if not (mask_rows or any(a.dirty for a in arenas.values())):
+        caches pytree is donated into the jit'd step, and donation
+        rejects the same buffer appearing in two leaves.  Runs once per
+        iteration, before the pooled dispatch.  (No row masking: every
+        pool row's writes are real under the unified step — prefill
+        chunks write exactly their pages' promised content, inactive
+        rows write nothing at all.)"""
+        if not any(a.dirty for a in arenas.values()):
             return caches
         out = []
         for c, ring in zip(caches, rings):
             if ring is not None and isinstance(c.get("attn"), PagedKVCache):
                 tbl = arenas[ring].block_tables
-                if mask_rows:
-                    tbl = tbl.copy()
-                    tbl[mask_rows] = 0
                 c = dict(c)
                 c["attn"] = c["attn"]._replace(block_table=jnp.asarray(tbl))
             out.append(c)
         for a in arenas.values():
-            a.dirty = bool(mask_rows)
+            a.dirty = False
         return out
 
     def _page_keys(self, toks: np.ndarray) -> List[bytes]:
@@ -647,9 +666,9 @@ class ServeEngine:
     def _copy_pages(caches, rings, copies: Dict[int, List[Tuple[int, int]]]):
         """Apply copy-on-write page payload copies on device: for every
         layer of each affected ring group, k/vt page ``old`` duplicates
-        into ``new``.  Must run before the next decode/chunk step writes
-        any page (the (old, new) ids are only meaningful against the
-        page contents at sweep time)."""
+        into ``new``.  Must run before the next unified step writes any
+        page (the (old, new) ids are only meaningful against the page
+        contents at sweep time)."""
         out = []
         for c, ring in zip(caches, rings):
             if ring in copies and isinstance(c.get("attn"), PagedKVCache):
@@ -674,13 +693,15 @@ class ServeEngine:
               ) -> Tuple[Dict[int, np.ndarray], Dict[str, float]]:
         """Run the continuous-batching loop to completion.
 
-        Returns ({rid: generated tokens}, stats).  The loop alternates
-        admission (prefill new requests into free slots) with ONE pooled
-        decode step for every occupied slot; retirement frees slots
-        mid-flight and the next iteration backfills them from the queue.
-        In paged mode each iteration also grows every active slot's block
-        tables to cover its next token, preempting the lowest-priority
-        slot back to the queue when the arena runs dry."""
+        Returns ({rid: generated tokens}, stats).  Each loop iteration:
+        host-side admission moves queued requests into free slots as
+        in-flight prefills, paged growth covers every row's next writes
+        (preempting the lowest-priority slot when the arena runs dry),
+        then exactly ONE jit dispatch advances the whole pool — the
+        unified chunk+decode forward when any prefill is in flight, the
+        pooled decode (or speculative draft-verify-commit) step
+        otherwise.  Retirement frees slots mid-flight and the next
+        iteration backfills them from the queue."""
         if (getattr(self.model.cfg, "frontend_tokens", 0)
                 or not hasattr(self.model, "init_caches")):
             raise ValueError("continuous batching serves decoder-only "
@@ -715,15 +736,14 @@ class ServeEngine:
         scheduler = Scheduler(requests)
         pool = kvcache.SlotPool(max(1, min(self.cfg.num_slots,
                                            len(requests) or 1)))
-        # chunked prefill needs the cache-continuation path, which is
-        # attention-only (recurrent state has no chunk-resume face);
-        # speculative decode rides the same verify attend, so it is
-        # attention-only too — recurrent families decode plainly
-        chunk = self.cfg.prefill_chunk if self._ragged_ok else None
+        chunk = self.cfg.prefill_chunk
+        # speculative decode rides the deferred-write verify attend,
+        # which is attention-only — recurrent families decode plainly
         spec_k = self.cfg.spec_decode if (self.cfg.spec_decode and
                                           self._ragged_ok) else None
-        # candidate write span per pooled step: the pending token plus
-        # the k drafted tokens (non-speculative steps write one position)
+        # candidate write span per pure-decode step: the pending token
+        # plus the k drafted tokens (plain decode writes one position;
+        # mixed unified iterations also write exactly one per decode row)
         span = (spec_k + 1) if spec_k else 1
         arenas: Dict[int, kvcache.PageArena] = {}
         rings: List[Optional[int]] = []
@@ -745,7 +765,6 @@ class ServeEngine:
         results: Dict[int, np.ndarray] = {}
         resumed: Dict[int, List[int]] = {}   # rid -> tokens before preempt
         dcaches = None
-        draft_len = 0
         if spec_k:
             self._resolve_draft()
             # the draft pool is contiguous (a small, unshared fraction of
@@ -755,17 +774,17 @@ class ServeEngine:
                                                    draft_len)
             if self._spec_jit is None:
                 self._build_spec_step()
-            if chunk and self._draft_chunk_jit is None:
-                self._build_draft_chunk_step()
         if not spec_k and self._decode_jit is None:
             self._build_decode()
-        if chunk and self._chunk_jit is None:
-            self._build_chunk_step()
+        if self._unified_jit is None:
+            self._build_unified(bool(spec_k))
         key = jax.random.PRNGKey(self.cfg.seed)
-        prefill_batches = 0
-        prefill_chunks = 0
+        prefill_batches = 0  # iterations that admitted >= 1 request
+        prefill_chunks = 0   # chunk advances of chunk-split prompts
         preemptions = 0
         admit_seq = 0
+        iterations = 0       # engine loop passes that dispatched
+        dispatches = 0       # jit calls issued — the ratio pins at 1
         spec_steps = 0
         spec_slot_steps = 0      # (active slot, verify step) pairs
         spec_drafted = 0
@@ -817,9 +836,17 @@ class ServeEngine:
             peak_pages = max(peak_pages, sum(
                 a.used_pages for a in arenas.values()))
 
+        def plan_width() -> int:
+            """Unified-step chunk width this iteration: the configured
+            chunk, else the power-of-two bucket covering the longest
+            remaining prompt (whole prompts land in one iteration and
+            the compile count stays O(log max_prompt))."""
+            rem = max(len(st.toks) - st.done for st in inflight.values())
+            return chunk if chunk else _pow2_bucket(rem)
+
         while scheduler or pool.active_count:
-            # -- admission: fill free slots from the queue ------------------
-            admitted: List[Tuple[int, Request]] = []
+            # -- admission: host bookkeeping only, no dispatch --------------
+            admitted_any = False
             while scheduler and pool.free_count:
                 req = scheduler.pop()
                 pre = resumed.get(req.rid, [])
@@ -836,149 +863,63 @@ class ServeEngine:
                          np.asarray(pre, np.int32)]))
                     for arena in arenas.values():
                         arena.set_prefix_keys(slot, keys, plen)
-                if chunk and plen > chunk:
-                    # chunk-aware packing: long prompts leave the wave and
-                    # stream in as in-flight prefills; reserve only their
-                    # FIRST chunk's pages now, the rest grows per chunk
-                    if arenas and not all(a.can_grow(slot, chunk)
-                                          for a in arenas.values()):
-                        for arena in arenas.values():
-                            arena.release(slot)   # drops the promises
-                        pool.release(slot)
-                        scheduler.requeue(req)
-                        break
-                    for arena in arenas.values():
-                        arena.grow(slot, chunk)
-                    toks = np.concatenate(
-                        [np.asarray(req.tokens, np.int32),
-                         np.asarray(resumed.pop(req.rid, []), np.int32)])
-                    inflight[slot] = _PrefillState(req, toks, pre,
-                                                   admit_seq)
-                    admit_seq += 1
-                    continue
-                # reserve prompt + first decode write (plen + 1): admitting
-                # on prompt pages alone could prefill a request only for
-                # its own first growth step to preempt it straight back
-                if arenas and not all(a.can_grow(slot, plen + 1)
+                # chunk-split prompts reserve only their FIRST chunk's
+                # pages now (the rest grows per iteration); whole-prompt
+                # admissions reserve prompt + first decode write — pages
+                # alone could otherwise prefill a request only for its
+                # own first growth step to preempt it straight back
+                reserve = chunk if (chunk and plen > chunk) else plen + 1
+                if arenas and not all(a.can_grow(slot, reserve)
                                       for a in arenas.values()):
                     for arena in arenas.values():
-                        arena.release(slot)       # drops the promises
+                        arena.release(slot)   # drops the promises
                     pool.release(slot)
-                    scheduler.requeue(req)   # no pages yet; retry later
+                    scheduler.requeue(req)    # no pages yet; retry later
                     break
                 for arena in arenas.values():
-                    arena.grow(slot, plen + 1)
-                admitted.append((slot, req))
-            if admitted:
+                    arena.grow(slot, reserve)
+                toks = np.concatenate(
+                    [np.asarray(req.tokens, np.int32),
+                     np.asarray(resumed.pop(req.rid, []), np.int32)])
+                inflight[slot] = _PrefillState(req, toks, pre, admit_seq)
+                admit_seq += 1
+                admitted_any = True
+            if admitted_any:
                 prefill_batches += 1
-                caches = self._sync_tables(caches, arenas, rings)
-                reqs = [r for _, r in admitted]
-                pre = [resumed.pop(r.rid, []) for r in reqs]
-                caches, first, key = self._admit(
-                    caches, reqs, pre, [s for s, _ in admitted], key)
-                if spec_k:
-                    # the draft pool prefills the same wave so drafting
-                    # can start from the committed prompt immediately
-                    dcaches = self._draft_admit(
-                        dcaches, reqs, pre, [s for s, _ in admitted],
-                        draft_len)
-                for (slot, req), tok, res in zip(admitted, first, pre):
-                    st = _SlotState(req, self.cfg.eos_id,
-                                    len(req.tokens) + len(res),
-                                    admit_seq, res)
-                    admit_seq += 1
-                    states[slot] = st
-                    token_buf[slot, 0] = tok
-                    if stream_cb:
-                        stream_cb(req.rid, len(res), tok)
-                    if st.push(tok):
-                        retire(slot)
-            # -- in-flight prefills: one chunk each, decode stays live ------
-            for slot in sorted(inflight):
-                if slot not in inflight:     # preempted by a peer's growth
-                    continue
-                st = inflight[slot]
-                n = min(chunk, len(st.toks) - st.done)
-                final = st.done + n == len(st.toks)
-                # grow pages to cover this chunk (+ the first decode write
-                # when it completes the prompt), preempting on exhaustion
-                if arenas:
-                    target = st.done + n + (1 if final else 0)
-                    evicted = False
-                    while not all(a.can_grow(slot, target)
-                                  for a in arenas.values()):
-                        victim = pick_victim()
-                        preempt(victim)
-                        preemptions += 1
-                        if victim == slot:
-                            evicted = True
-                            break
-                    if evicted:
-                        continue
-                    for arena in arenas.values():
-                        arena.grow(slot, target)
-                    peak()
-                caches = self._sync_tables(caches, arenas, rings)
-                buf = np.zeros((1, chunk), np.int32)
-                buf[0, :n] = st.toks[st.done:st.done + n]
-                logits, caches = self._chunk_jit(
-                    self.dparams, jnp.asarray(buf), caches,
-                    jnp.asarray([slot], jnp.int32),
-                    jnp.asarray([st.done], jnp.int32),
-                    jnp.asarray([n], jnp.int32))
-                if spec_k:
-                    # keep the draft cache streaming in lockstep
-                    dcaches = self._draft_chunk_jit(
-                        self.draft_dparams, jnp.asarray(buf), dcaches,
-                        jnp.asarray([slot], jnp.int32),
-                        jnp.asarray([st.done], jnp.int32),
-                        jnp.asarray([n], jnp.int32))
-                prefill_chunks += 1
-                st.done += n
-                if final:
-                    del inflight[slot]
-                    key, sub = jax.random.split(key)
-                    tok = int(np.asarray(self._sample(logits, sub))[0, 0])
-                    sst = _SlotState(st.request, self.cfg.eos_id,
-                                     len(st.toks), st.admit_seq, st.pre)
-                    states[slot] = sst
-                    token_buf[slot, 0] = tok
-                    if stream_cb:
-                        stream_cb(st.request.rid, len(st.pre), tok)
-                    if sst.push(tok):
-                        retire(slot)
-            if not states:
+            if not (states or inflight):
                 continue
-            # -- paged growth: cover the write span; preempt on exhaustion --
-            # (span = 1 plain decode; k+1 with speculative decode — the
-            # pending token plus every drafted candidate position)
+            # -- paged growth: cover every row's writes; preempt on
+            # exhaustion.  Prefill rows grow to their chunk end (+ the
+            # first decode write when it lands the prompt); decode rows
+            # grow by the write span (1 plain/mixed; k+1 speculative).
+            # The COW sweep privatizes shared pages a DECODE write would
+            # diverge — prefill-chunk writes never diverge a page (they
+            # write exactly the content its hash key promises), so
+            # in-flight rows need neither COW nor masking.
             if arenas:
                 copies: Dict[int, List[Tuple[int, int]]] = {}
-                while True:
+                while states or inflight:
                     ok = True
-                    for slot in sorted(states):
-                        need = states[slot].cache_len + span
-                        if not all(a.grow(slot, need)
+                    dspan = span if (spec_k and not inflight) else 1
+                    width = plan_width() if inflight else 0
+                    for slot in sorted(set(states) | set(inflight)):
+                        if slot in inflight:
+                            ist = inflight[slot]
+                            n = min(width, len(ist.toks) - ist.done)
+                            final = ist.done + n == len(ist.toks)
+                            target = ist.done + n + (1 if final else 0)
+                        else:
+                            target = states[slot].cache_len + dspan
+                        if not all(a.grow(slot, target)
                                    for a in arenas.values()):
                             ok = False
                             break
                     if ok:
-                        # copy-on-write sweep: a decode write landing in a
-                        # SHARED page privatizes it first (other readers
-                        # keep the original); a sole-owner write to a
-                        # hash-consed page retires the key instead, so no
-                        # later admission adopts diverged content.  Only
-                        # decoding slots write divergent bits — in-flight
-                        # prefills are masked onto the trash page below.
-                        # Speculative steps sweep the whole candidate span
-                        # conservatively: acceptance isn't known yet, and
-                        # a shared page must be private BEFORE any commit
-                        # write could land in it.
                         for ring, a in arenas.items():
                             for slot in sorted(states):
                                 base = states[slot].cache_len
                                 done_lp = set()
-                                for pos in range(base, base + span):
+                                for pos in range(base, base + dspan):
                                     lp, page = a.write_page(slot, pos)
                                     if page == 0 or lp in done_lp:
                                         continue
@@ -999,33 +940,85 @@ class ServeEngine:
                         break
                     preempt(pick_victim())
                     preemptions += 1
-                    if not states:
-                        break
-                if not states:
+                if not (states or inflight):
                     continue
                 if copies:
-                    # apply payload copies BEFORE the decode step writes
+                    # apply payload copies BEFORE the step writes
                     # anything: the (old, new) ids are snapshots of the
                     # sweep-time page contents
                     caches = self._copy_pages(caches, rings, copies)
                 peak()
-                # masking in-flight rows onto the trash page only matters
-                # when pages can be shared — with one-owner pages the
-                # garbage write stays inside the slot's own pages, so the
-                # unshared path keeps PR 3's sync-only-when-dirty behavior
-                mask = sorted(inflight) if self.cfg.prefix_share else ()
-                caches = self._sync_tables(caches, arenas, rings,
-                                           mask_rows=mask)
-            # -- one pooled decode step over every slot ---------------------
-            # (mid-prefill slots ride along as garbage rows: their one
-            # stale write per iteration lands at the position the NEXT
-            # chunk overwrites — or outside every later window — and their
-            # sampled tokens are simply never read.  Speculative steps
-            # instead mask non-decoding slots out of the commit entirely
-            # — n_commit 0 writes nothing — because a multi-token garbage
-            # write could wrap onto window content a later chunk query
-            # still needs.)
-            if spec_k:
+                caches = self._sync_tables(caches, arenas, rings)
+            # -- ONE pooled dispatch advances every in-flight stream --------
+            if inflight:
+                # unified mixed iteration: prefill chunks + decode rows
+                # fused in one forward (see _build_unified)
+                width = plan_width()
+                toks_buf = np.zeros((pool.num_slots, width), np.int32)
+                start_buf = np.zeros((pool.num_slots,), np.int32)
+                valid_buf = np.zeros((pool.num_slots,), np.int32)
+                fresh_buf = np.zeros((pool.num_slots,), bool)
+                advance: Dict[int, int] = {}
+                for slot in sorted(inflight):
+                    ist = inflight[slot]
+                    n = min(width, len(ist.toks) - ist.done)
+                    toks_buf[slot, :n] = ist.toks[ist.done:ist.done + n]
+                    start_buf[slot] = ist.done
+                    valid_buf[slot] = n
+                    fresh_buf[slot] = ist.done == 0
+                    advance[slot] = n
+                for slot in sorted(states):
+                    toks_buf[slot, 0] = token_buf[slot, 0]
+                    start_buf[slot] = states[slot].cache_len
+                    valid_buf[slot] = 1
+                if spec_k:
+                    nxt, caches, dcaches, key = self._unified_jit(
+                        self.dparams, self.draft_dparams,
+                        jnp.asarray(toks_buf), caches, dcaches,
+                        jnp.asarray(start_buf), jnp.asarray(valid_buf),
+                        jnp.asarray(fresh_buf), key)
+                else:
+                    nxt, caches, key = self._unified_jit(
+                        self.dparams, jnp.asarray(toks_buf), caches,
+                        jnp.asarray(start_buf), jnp.asarray(valid_buf),
+                        jnp.asarray(fresh_buf), key)
+                iterations += 1
+                dispatches += 1
+                nxt_np = np.asarray(nxt)
+                pool.tick(busy=len(states) + len(inflight))
+                # decode rows first: a decoding slot's token streams
+                # before the first token of a prefill landing its final
+                # chunk in the same forward (TTFT liveness ordering)
+                for slot in sorted(states):
+                    st = states[slot]
+                    st.cache_len += 1
+                    tok = int(nxt_np[slot, 0])
+                    token_buf[slot, 0] = tok
+                    if stream_cb:
+                        stream_cb(st.request.rid, len(st.generated), tok)
+                    if st.push(tok):
+                        retire(slot)
+                for slot in sorted(inflight):
+                    ist = inflight[slot]
+                    n = advance[slot]
+                    if chunk and len(ist.toks) > chunk:
+                        prefill_chunks += 1
+                    ist.done += n
+                    if ist.done < len(ist.toks):
+                        continue
+                    del inflight[slot]
+                    sst = _SlotState(ist.request, self.cfg.eos_id,
+                                     len(ist.toks), ist.admit_seq, ist.pre)
+                    states[slot] = sst
+                    tok = int(nxt_np[slot, 0])
+                    token_buf[slot, 0] = tok
+                    if stream_cb:
+                        stream_cb(ist.request.rid, len(ist.pre), tok)
+                    if sst.push(tok):
+                        retire(slot)
+            elif spec_k:
+                # pure-decode speculative iteration: draft k, verify
+                # k+1, commit the accepted prefix — one jit
                 start_buf = np.zeros((pool.num_slots,), np.int32)
                 active_buf = np.zeros((pool.num_slots,), bool)
                 for s in states:
@@ -1035,6 +1028,8 @@ class ServeEngine:
                     self.dparams, self.draft_dparams,
                     jnp.asarray(token_buf), caches, dcaches,
                     jnp.asarray(start_buf), jnp.asarray(active_buf), key)
+                iterations += 1
+                dispatches += 1
                 out_np = np.asarray(out)
                 n_np = np.asarray(n_acc)
                 pool.tick(busy=len(states))
@@ -1064,8 +1059,12 @@ class ServeEngine:
                         for a in arenas.values():
                             a.truncate(slot, states[slot].cache_len)
             else:
+                # pure-decode iteration: the dedicated pooled decode step
+                # (deploy_decode — the fused paged kernel's home)
                 token, caches, key = self._decode_jit(
                     self.dparams, jnp.asarray(token_buf), caches, key)
+                iterations += 1
+                dispatches += 1
                 toks = np.asarray(token)
                 pool.tick(busy=len(states))
                 token_buf = toks.copy()
@@ -1088,7 +1087,9 @@ class ServeEngine:
             decode_steps=pool.decode_steps,
             arenas=list(arenas.values()) if arenas else None,
             spec_drafted=spec_drafted if spec_k else None,
-            spec_accepted=spec_accepted, spec_slot_steps=spec_slot_steps)
+            spec_accepted=spec_accepted, spec_slot_steps=spec_slot_steps,
+            iterations=iterations, dispatches=dispatches,
+            compiles=dict(self._compiles))
         report["prefill_batches"] = float(prefill_batches)
         report["prefill_chunks"] = float(prefill_chunks)
         report["requests"] = float(len(requests))
@@ -1115,60 +1116,3 @@ class ServeEngine:
                 pb += arenas[ring].peak_pages * per_page
             report["peak_page_bytes"] = float(pb)
         return results, report
-
-    def _admit(self, caches, reqs: List[Request],
-               resumed: List[List[int]], slots: List[int], key):
-        """Prefill an admission wave and scatter it into the pool.
-
-        ``resumed`` carries tokens generated before a preemption; they are
-        appended to the prompt and recomputed (recompute-on-resume).
-        Equal-length waves batch directly; mixed-length waves use ragged
-        right-padded prefill (attention stacks) or fall back to jit'd
-        per-request prefill on power-of-two length buckets
-        (recurrent-state families; masked scans freeze state at the true
-        length, so padding is exact AND the compile count stays
-        O(log max_prompt) instead of one per distinct prompt length).
-        In paged mode the prefill ring is sized to the wave's longest
-        prompt so rings never wrap and ring slot s == token position s —
-        the page scatter in ``kvcache.insert_slots`` relies on that.
-        Returns (caches, first sampled token per request, key)."""
-        toks = [np.concatenate([np.asarray(r.tokens, np.int32),
-                                np.asarray(res, np.int32)])
-                for r, res in zip(reqs, resumed)]
-        lens = [len(t) for t in toks]
-        smax = max(lens)
-        prefill_len = max(smax, 1) if self.cfg.paged else self.cfg.max_len
-        batch = np.zeros((len(reqs), smax), np.int32)
-        for i, t in enumerate(toks):
-            batch[i, :lens[i]] = t
-        if len(set(lens)) == 1:
-            logits, seq_caches = self.model.prefill_with_cache(
-                self.dparams, jnp.asarray(batch), max_len=prefill_len)
-        elif self._ragged_ok:
-            logits, seq_caches = self.model.prefill_with_cache(
-                self.dparams, jnp.asarray(batch), max_len=prefill_len,
-                seq_lens=np.asarray(lens, np.int32))
-        else:
-            if self._fallback_jit is None:
-                self._build_fallback()
-            # one bucket for the whole wave: per-request caches must
-            # concatenate (equal ring sizes), and in paged mode the ring
-            # must stay wrap-free for real positions, so the bucket sizes
-            # the prefill ring too
-            bucket = _pow2_bucket(smax)
-            ring = bucket if self.cfg.paged else prefill_len
-            parts = []
-            for t in toks:
-                buf = np.zeros((1, bucket), np.int32)
-                buf[0, :len(t)] = t
-                parts.append(self._fallback_jit(
-                    self.dparams, jnp.asarray(buf),
-                    np.asarray([len(t)], np.int32), ring))
-            logits = jnp.concatenate([lg for lg, _ in parts], axis=0)
-            seq_caches = jax.tree.map(
-                lambda *xs: jnp.concatenate(xs, axis=0),
-                *[c for _, c in parts])
-        caches = kvcache.insert_slots(caches, seq_caches, slots)
-        key, sub = jax.random.split(key)
-        first = np.asarray(self._sample(logits, sub))[:, 0]
-        return caches, [int(t) for t in first], key

@@ -61,7 +61,9 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
                  busy_slot_steps: int = 0, decode_steps: int = 0,
                  arenas: Optional[Sequence["PageArena"]] = None,
                  spec_drafted: Optional[int] = None,
-                 spec_accepted: int = 0, spec_slot_steps: int = 0
+                 spec_accepted: int = 0, spec_slot_steps: int = 0,
+                 iterations: Optional[int] = None, dispatches: int = 0,
+                 compiles: Optional[Dict[str, int]] = None
                  ) -> Dict[str, float]:
     """Memory + (optionally) per-slot occupancy/utilization stats.
 
@@ -97,6 +99,12 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
       spec_accepted, spec_accept_rate (accepted drafts / drafted) and
       spec_tokens_per_step (mean committed tokens per active slot per
       verify step: 1 bonus/resample + the accepted drafts).
+      With iterations (the unified engine ran) also iterations,
+      dispatches_per_iteration (jit calls / engine iterations — the
+      one-kernel-iteration contract pins this at exactly 1.0),
+      unified_compiles (XLA traces of the pooled unified forward; stays
+      O(log max_prompt) via power-of-two width buckets) and
+      engine_compiles (every engine-step trace: unified + decode + spec).
     """
     total = cache_bytes(caches)
     per_tok = total / max(seq_len * batch, 1)
@@ -157,6 +165,12 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
         report["spec_accept_rate"] = spec_accepted / max(spec_drafted, 1)
         report["spec_tokens_per_step"] = (
             (spec_accepted + spec_slot_steps) / max(spec_slot_steps, 1))
+    if iterations is not None:
+        report["iterations"] = float(iterations)
+        report["dispatches_per_iteration"] = dispatches / max(iterations, 1)
+        compiles = compiles or {}
+        report["unified_compiles"] = float(compiles.get("unified", 0))
+        report["engine_compiles"] = float(sum(compiles.values()))
     return report
 
 

@@ -111,10 +111,10 @@ def test_chunked_serve_moe_and_swa(arch):
         assert report["prefill_chunks"] >= 2  # 45 and 33 both chunk
 
 
-def test_recurrent_families_ignore_chunking():
-    """hybrid/ssm stacks have no attention-only continuation path; the
-    engine must serve them whole-prompt (and still exactly) with
-    prefill_chunk set."""
+def test_recurrent_families_chunk_via_carry_resume():
+    """hybrid/ssm stacks chunk through their recurrent carry state (the
+    ``state=`` resume face): long prompts stream chunk by chunk through
+    the unified step, bit-identical to whole-prompt prefill."""
     for arch in ("hymba-1.5b", "xlstm-350m"):
         cfg, model, dparams = _build(arch)
         prompts = _prompts(cfg, (40, 5), seed=11)
@@ -126,7 +126,9 @@ def test_recurrent_families_ignore_chunking():
         for i, (a, b) in enumerate(zip(ref, out)):
             np.testing.assert_array_equal(a, b,
                                           err_msg=f"{arch} request {i}")
-        assert report["prefill_chunks"] == 0.0
+        # the 40-token prompt splits into two chunks of the unified step
+        assert report["prefill_chunks"] >= 2.0
+        assert report["dispatches_per_iteration"] == 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -218,9 +220,11 @@ def test_pow2_bucket():
     assert _pow2_bucket(100) == 128
 
 
-def test_chunk_rejects_recurrent_blocks(smollm):
+def test_chunk_rejects_encdec_blocks(smollm):
+    """Recurrent blocks now HAVE a chunk face (carry-state resume); only
+    enc-dec decoder blocks are left without one."""
     from repro.models.blocks import Block
-    cfg, model, dparams = _build("xlstm-350m")
-    blk = Block(cfg, kind="mlstm")
-    with pytest.raises(ValueError, match="attention"):
+    cfg, model, dparams = smollm
+    blk = Block(cfg, kind="dec")
+    with pytest.raises(ValueError, match="enc-dec"):
         blk.deploy_prefill_chunk({}, jnp.zeros((1, 4, cfg.d_model)), {})

@@ -1,0 +1,240 @@
+"""Engine-vs-oracle differential layer for the unified one-kernel
+iteration.
+
+The pooled engine advances EVERY in-flight stream — ragged prefill
+chunks packed next to decode rows — in a single jit dispatch per
+iteration.  These tests pin that invariant two ways:
+
+  1. Trace replay: hypothesis-generated traces (prompt lengths, budgets,
+     priorities, slot counts, layouts, chunking, page scarcity that
+     forces preemption) run through the unified engine AND a naive
+     one-request-at-a-time reference loop; outputs must match
+     token-for-token across all five model families and both cache
+     layouts.
+  2. Dispatch counting: a jit-call probe wraps ``jax.jit`` so every
+     compiled callable the engine builds counts its invocations —
+     exactly one pooled dispatch per engine iteration, and total
+     compiles stay O(log max_prompt) via the power-of-two width buckets.
+"""
+import functools
+import math
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.configs import base
+from repro.models.lm import build_model
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+
+FAMILIES = (
+    "smollm-135m",    # dense
+    "mixtral-8x22b",  # MoE
+    "gemma3-27b",     # mixed local/global sliding windows
+    "hymba-1.5b",     # attention + mamba hybrid
+    "xlstm-350m",     # pure recurrent (mLSTM/sLSTM)
+)
+
+MAX_LEN = 64          # pool capacity: prompt + budget must fit
+MAX_PROMPT = 40
+MAX_NEW = 6
+
+_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "0")) or 3
+
+
+@functools.lru_cache(maxsize=None)
+def _build(arch):
+    cfg = base.get_smoke_config(arch)
+    model = build_model(cfg)
+    dparams = model.convert(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, dparams
+
+
+@functools.lru_cache(maxsize=None)
+def _oracle_engine(arch):
+    """The reference loop's engine: one slot, contiguous cache, whole
+    prompts, no chunking/paging/sharing/speculation — each request is
+    served ALONE, so nothing the unified step does can leak in."""
+    cfg, model, dparams = _build(arch)
+    return ServeEngine(model, dparams, ServeConfig(max_len=MAX_LEN))
+
+
+def _oracle(arch, reqs):
+    """Naive one-request-at-a-time reference: rid -> generated tokens."""
+    eng = _oracle_engine(arch)
+    out = {}
+    for r in reqs:
+        solo, _ = eng.generate(np.asarray(r.tokens)[None, :],
+                               max_new_tokens=r.max_new_tokens)
+        out[r.rid] = np.asarray(solo[0])
+    return out
+
+
+def _trace(cfg, rng, n_lo=2, n_hi=5):
+    """A random request trace: ragged prompt lengths (1..MAX_PROMPT, so
+    chunk-dividing, non-dividing, and sub-chunk prompts all occur),
+    ragged decode budgets, and shuffled priorities (arrival order is the
+    list order; priorities invert it so preemption picks victims)."""
+    reqs = []
+    for rid in range(int(rng.integers(n_lo, n_hi + 1))):
+        plen = int(rng.integers(1, MAX_PROMPT + 1))
+        toks = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
+        reqs.append(Request(rid=rid, tokens=toks,
+                            max_new_tokens=int(rng.integers(1, MAX_NEW + 1)),
+                            priority=int(rng.integers(0, 3))))
+    return reqs
+
+
+def _assert_matches_oracle(arch, reqs, out, tag):
+    ref = _oracle(arch, reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(
+            out[r.rid], ref[r.rid],
+            err_msg=f"{arch} {tag} rid {r.rid} "
+                    f"(prompt {len(r.tokens)}, budget {r.max_new_tokens})")
+
+
+# ---------------------------------------------------------------------------
+# 1. Trace replay: unified engine == one-request-at-a-time oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+@settings(max_examples=_EXAMPLES, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_trace_replay_matches_oracle(arch, seed):
+    """Random traces through the pooled engine with randomly drawn
+    layout (contiguous/paged), chunking, slot counts, and page scarcity
+    must reproduce the naive reference loop token-for-token — and every
+    iteration must be exactly one dispatch."""
+    cfg, model, dparams = _build(arch)
+    rng = np.random.default_rng(seed)
+    reqs = _trace(cfg, rng)
+    kw = dict(max_len=MAX_LEN,
+              num_slots=int(rng.integers(1, 4)),
+              prefill_chunk=(None, 32)[int(rng.integers(0, 2))])
+    if rng.integers(0, 2):
+        # scarce arenas (num_pages below full provisioning) force
+        # preemption + recompute-resume mid-trace
+        kw.update(paged=True, page_size=32, max_blocks=2,
+                  num_pages=int(rng.integers(2, 2 * kw["num_slots"] + 1)))
+    out, report = ServeEngine(model, dparams, ServeConfig(**kw)).serve(reqs)
+    _assert_matches_oracle(arch, reqs, out, f"seed={seed} cfg={kw}")
+    assert report["dispatches_per_iteration"] == 1.0
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_all_families_both_layouts(arch, paged):
+    """Deterministic guarantee (independent of what the fuzz draws):
+    every family serves one fixed mixed trace — chunking long prompts,
+    a sub-chunk prompt, inverted priorities, and (paged) a scarce arena
+    — bit-identical to the reference loop."""
+    cfg, model, dparams = _build(arch)
+    rng = np.random.default_rng(23)
+    lens = (40, 5, 33, 17)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        (n,)).astype(np.int32),
+                    max_new_tokens=2 + i % 3,
+                    priority=(1, 0, 2, 0)[i])
+            for i, n in enumerate(lens)]
+    kw = dict(max_len=MAX_LEN, num_slots=2, prefill_chunk=32)
+    if paged:
+        kw.update(paged=True, page_size=32, max_blocks=2, num_pages=3)
+    out, report = ServeEngine(model, dparams, ServeConfig(**kw)).serve(reqs)
+    _assert_matches_oracle(arch, reqs, out, f"paged={paged}")
+    assert report["dispatches_per_iteration"] == 1.0
+    assert report["prefill_chunks"] >= 2.0  # 40 and 33 both chunk
+
+
+def test_spec_decode_joins_unified_iterations():
+    """With speculation on, mixed iterations advance decode rows one
+    plain token through the pooled forward (the draft ingests the same
+    chunk in lockstep) and pure-decode iterations batch-verify — output
+    must still match the plain reference loop."""
+    arch = "smollm-135m"
+    cfg, model, dparams = _build(arch)
+    rng = np.random.default_rng(29)
+    reqs = _trace(cfg, rng, n_lo=3, n_hi=4)
+    out, report = ServeEngine(model, dparams, ServeConfig(
+        max_len=MAX_LEN, num_slots=2, prefill_chunk=32,
+        spec_decode=3)).serve(reqs)
+    _assert_matches_oracle(arch, reqs, out, "spec_decode=3")
+    assert report["dispatches_per_iteration"] == 1.0
+    assert report["spec_steps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# 2. Dispatch-count regression: one pooled jit call per iteration
+# ---------------------------------------------------------------------------
+
+
+def _count_jit_calls(monkeypatch):
+    """Wrap ``jax.jit`` so every compiled callable built while the patch
+    is live counts its invocations.  The engine is the only jit call
+    site in the serve path, so the counter IS the dispatch count."""
+    calls = {"n": 0}
+    real_jit = jax.jit
+
+    def counting_jit(fun, **kw):
+        compiled = real_jit(fun, **kw)
+
+        @functools.wraps(compiled)
+        def wrapped(*args, **kwargs):
+            calls["n"] += 1
+            return compiled(*args, **kwargs)
+
+        return wrapped
+
+    monkeypatch.setattr(jax, "jit", counting_jit)
+    return calls
+
+
+def test_one_dispatch_per_iteration_mixed_trace(monkeypatch):
+    """Trace-count probe: on a mixed prefill+decode trace (a long prompt
+    chunk-streams while short requests decode) EVERY engine iteration
+    issues exactly ONE pooled jit dispatch — counted at the compiled
+    callable, not trusted from the report — and the chunked width means
+    a single unified compile."""
+    cfg, model, dparams = _build("smollm-135m")
+    rng = np.random.default_rng(31)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        (n,)).astype(np.int32),
+                    max_new_tokens=(8, 3, 4)[i])
+            for i, n in enumerate((4, 96, 33))]
+    calls = _count_jit_calls(monkeypatch)
+    out, report = ServeEngine(model, dparams, ServeConfig(
+        max_len=128, num_slots=2, prefill_chunk=32)).serve(reqs)
+    assert calls["n"] == report["iterations"] > 0
+    assert report["dispatches_per_iteration"] == 1.0
+    # one fixed chunk width -> the unified step compiles exactly once
+    assert report["unified_compiles"] == 1.0
+    _assert_matches_oracle("smollm-135m", reqs, out, "probe")
+
+
+def test_compile_count_log_bounded_unchunked():
+    """Without chunking, prompt widths bucket to powers of two (floor
+    16), so a trace whose prompts span 5..100 tokens compiles the
+    unified step at most log2(max_prompt) times — never once per
+    prompt length, never once per in-flight combination."""
+    cfg, model, dparams = _build("smollm-135m")
+    rng = np.random.default_rng(37)
+    lens = (5, 17, 33, 70, 100, 12, 40)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        (n,)).astype(np.int32),
+                    max_new_tokens=3)
+            for i, n in enumerate(lens)]
+    out, report = ServeEngine(model, dparams, ServeConfig(
+        max_len=128, num_slots=3)).serve(reqs)
+    assert report["dispatches_per_iteration"] == 1.0
+    # buckets used are a subset of {16, 32, 64, 128}
+    assert report["unified_compiles"] <= math.log2(max(lens)) + 1
+    assert report["unified_compiles"] < len(lens)
+    # plus at most one pooled decode compile
+    assert report["engine_compiles"] <= report["unified_compiles"] + 1
+    _assert_matches_oracle("smollm-135m", reqs, out, "unchunked")

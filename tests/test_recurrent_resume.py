@@ -1,0 +1,155 @@
+"""Chunk-resume round-trips for the recurrent carry state.
+
+Recurrent families (Mamba hybrid, mLSTM/sLSTM) join the unified engine
+iteration through their ``state=`` resume face: a prompt streams in
+chunks, each chunk resuming the carries the previous one left in the
+pool.  These tests pin the three equalities the engine's bit-identity
+rests on, at the MODEL level (no engine in the loop):
+
+  * extract -> requeue -> resume: a mid-prefill carry extracted from the
+    pool, parked, and written back into a DIFFERENT slot of a fresh pool
+    must resume to caches bitwise equal to whole-prompt prefill.
+  * decode_step == width-1 chunk: advancing one token through the chunk
+    face (valid_len 1 in a wide buffer) must produce the same next token
+    and bitwise-equal caches as ``decode_step`` — mixed engine
+    iterations advance decode rows through the former, pure-decode
+    iterations through the latter.
+  * ``reset_recurrent_rows`` restores EXACT ``init_cache`` carries (not
+    zeros — sLSTM's normalizer and the max-gate stabilizers init
+    off-zero) for fresh rows only, leaving live rows bit-untouched.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.models.lm import build_model
+from repro.serve import kvcache
+
+ARCHS = ("smollm-135m", "hymba-1.5b", "xlstm-350m")
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def family(request):
+    cfg = base.get_smoke_config(request.param)
+    model = build_model(cfg)
+    dparams = model.convert(model.init(jax.random.PRNGKey(0)))
+    return request.param, cfg, model, dparams
+
+
+def _prompt(cfg, n, seed=5):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+
+
+def _chunk_in(model, dparams, pool, slot, toks, start, width=32):
+    """Feed one chunk of ``toks`` into ``pool[slot]`` via the resume
+    face, returning (logits, new pool)."""
+    buf = np.zeros((1, width), np.int32)
+    buf[0, :len(toks)] = toks
+    sub = kvcache.extract_slots(pool, [slot])
+    logits, sub = model.prefill_with_cache(
+        dparams, jnp.asarray(buf), caches=sub,
+        start=np.asarray([start], np.int32),
+        seq_lens=np.asarray([len(toks)], np.int32))
+    return logits, kvcache.writeback_slots(pool, sub, [slot])
+
+
+def _assert_trees_equal(a, b, msg):
+    for i, (x, y) in enumerate(zip(jax.tree.leaves(a), jax.tree.leaves(b))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{msg} (leaf {i})")
+
+
+def test_extract_requeue_resume_round_trip(family):
+    """Chunk 1 into slot 0, extract the mid-prefill carry, park it, write
+    it back into slot 1 of a FRESH pool, resume chunk 2 there — final
+    caches must be bitwise what whole-prompt prefill scatters into
+    slot 1 directly."""
+    arch, cfg, model, dparams = family
+    toks = _prompt(cfg, 45)
+    logits_w, seq = model.prefill_with_cache(
+        dparams, jnp.asarray(toks[None]), max_len=64)
+    pool_w = kvcache.insert_slots(model.init_caches(2, 64), seq, [1])
+
+    pool = model.init_caches(2, 64)
+    _, pool = _chunk_in(model, dparams, pool, 0, toks[:32], 0)
+    parked = kvcache.extract_slots(pool, [0])          # extract
+    pool = model.init_caches(2, 64)                    # requeue: slot freed
+    pool = kvcache.writeback_slots(pool, parked, [1])  # resume elsewhere
+    logits_c, pool = _chunk_in(model, dparams, pool, 1, toks[32:], 32)
+
+    _assert_trees_equal(pool_w, pool, f"{arch} resumed pool")
+    np.testing.assert_allclose(np.asarray(logits_w), np.asarray(logits_c),
+                               rtol=1e-6, err_msg=f"{arch} final logits")
+
+
+def test_decode_step_equals_width1_chunk(family):
+    """One token through the chunk face (column 0 of a wide buffer,
+    valid_len 1) vs ``decode_step``: same argmax token, bitwise-equal
+    caches."""
+    arch, cfg, model, dparams = family
+    toks = _prompt(cfg, 20, seed=7)
+    logits, seq = model.prefill_with_cache(
+        dparams, jnp.asarray(toks[None]), max_len=64)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+    logits_d, caches_d = model.decode_step(dparams, tok, seq)
+
+    buf = np.zeros((1, 32), np.int32)
+    buf[0, 0] = int(tok[0, 0])
+    logits_c, caches_c = model.prefill_with_cache(
+        dparams, jnp.asarray(buf), caches=seq,
+        start=np.asarray([20], np.int32),
+        seq_lens=np.asarray([1], np.int32))
+
+    _assert_trees_equal(caches_d, caches_c, f"{arch} caches")
+    assert int(jnp.argmax(logits_d[:, -1])) == int(jnp.argmax(logits_c[:, -1]))
+    np.testing.assert_allclose(np.asarray(logits_d), np.asarray(logits_c),
+                               rtol=1e-6, err_msg=f"{arch} logits")
+
+
+def test_reset_recurrent_rows_restores_init_exactly(family):
+    """After dirtying both pool rows with a prefill chunk, resetting row
+    0 must restore its recurrent carries to the EXACT ``init_cache``
+    bits while row 1 and every attention ring stay untouched."""
+    arch, cfg, model, dparams = family
+    toks = _prompt(cfg, 8, seed=9)
+    pool = model.init_caches(2, 32)
+    for slot in (0, 1):
+        _, pool = _chunk_in(model, dparams, pool, slot, toks, 0, width=8)
+    init = model.init_caches(2, 32)
+
+    reset = model.reset_recurrent_rows(pool, jnp.asarray([True, False]))
+
+    for li, (kind, _) in enumerate(model.plan):
+        for name in ("mamba", "cell"):
+            if name not in pool[li]:
+                continue
+            for d, z, r in zip(jax.tree.leaves(pool[li][name]),
+                               jax.tree.leaves(init[li][name]),
+                               jax.tree.leaves(reset[li][name])):
+                d, z, r = map(np.asarray, (d, z, r))
+                np.testing.assert_array_equal(
+                    r[0], z[0], err_msg=f"{arch} layer {li} {name} row 0 "
+                                        "not restored to init")
+                np.testing.assert_array_equal(
+                    r[1], d[1], err_msg=f"{arch} layer {li} {name} row 1 "
+                                        "clobbered by reset")
+        # non-recurrent entries (attention rings, lengths) pass through
+        rest_d = {k: v for k, v in pool[li].items()
+                  if k not in ("mamba", "cell")}
+        rest_r = {k: v for k, v in reset[li].items()
+                  if k not in ("mamba", "cell")}
+        _assert_trees_equal(rest_d, rest_r,
+                            f"{arch} layer {li} non-recurrent entries")
+    # and the carries really were dirty, so the row-0 check bites
+    if any(k in ("hybrid", "mlstm", "slstm") for k, _ in model.plan):
+        dirty = any(
+            not np.array_equal(np.asarray(d), np.asarray(z))
+            for li in range(len(pool))
+            for name in ("mamba", "cell") if name in pool[li]
+            for d, z in zip(jax.tree.leaves(pool[li][name]),
+                            jax.tree.leaves(init[li][name])))
+        assert dirty, f"{arch}: prefill left no recurrent carry to reset"
