@@ -40,6 +40,19 @@ Replays the same mixed short/long request trace through the schedulers:
               one bandwidth-bound decode step, so tokens/step is the
               expected speedup; CPU smoke wall-clock is dispatch-bound
               and not the signal).  --spec-k 0 disables the run.
+  slo         the traffic-layer run: a replayable OPEN-LOOP two-tenant
+              trace (repro.serve.trace — heavy-tailed Pareto arrivals,
+              gold/bronze tenant mix with per-request TTFT/TPOT SLOs,
+              gold riding a shared system prompt) served paged+share
+              +chunked under the quota fair-share policy with COW-aware
+              preemption and SLO-adaptive chunk width.  The headline is
+              goodput_under_slo — tokens from SLO-meeting requests per
+              second — plus per-tenant TTFT p50/p99 and preemption
+              counts (all in the --json schema; CI guards goodput).
+
+Every run's --json record carries the FULL EngineReport schema with
+nulls for features that were off, so downstream guards and diffs never
+KeyError across configs.
 
 Timing methodology: every engine first replays the SAME trace untimed —
 that pass compiles the decode/chunk jits and every prefill shape the trace
@@ -68,7 +81,9 @@ import numpy as np
 
 from repro.configs import base
 from repro.models.lm import build_model
-from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve import kvcache, trace as trace_lib
+from repro.serve.engine import (CacheConfig, PolicyConfig, Request,
+                                ServeConfig, ServeEngine, SpecConfig)
 
 
 def make_trace(rng, n, vocab, lo, hi, new_lo, new_hi, long_frac=0.25,
@@ -139,13 +154,25 @@ def run_static(eng: ServeEngine, reqs, num_slots: int):
     *_, warmup_s = one_pass()      # untimed warmup replay: compiles
     produced, steps, peak_bytes, ttft, dt = one_pass()
     util = produced / max(steps * num_slots, 1)
-    return {"tokens": produced, "seconds": dt,
-            "tokens_per_s": produced / dt, "slot_utilization": util,
-            "peak_cache_bytes": peak_bytes, "warmup_s": warmup_s,
-            **_ttft_stats(ttft)}
+    # full-schema base (mostly nulls — the static path has no serve
+    # loop) so every run's JSON record carries the same key set
+    out = dict(kvcache.EngineReport().as_dict())
+    out.update({"tokens": produced, "seconds": dt,
+                "tokens_per_s": produced / dt, "slot_utilization": util,
+                "peak_cache_bytes": peak_bytes, "warmup_s": warmup_s,
+                **_ttft_stats(ttft)})
+    return out
 
 
-def run_continuous(eng: ServeEngine, reqs):
+def run_continuous(eng: ServeEngine, reqs, engine_latency=False):
+    """One warmup + one timed replay of ``reqs`` through ``eng``.
+
+    The run dict is the engine's FULL ``EngineReport`` schema (nulls for
+    features that were off) plus the benchmark-level wall-clock figures.
+    ``engine_latency=False`` overrides the report's TTFT percentiles
+    with window-relative stamps (every request queued at t0 — the
+    closed-loop runs, comparable to ``run_static``); True keeps the
+    engine's arrival-relative figures (the open-loop SLO run)."""
     t0 = time.perf_counter()
     eng.serve(reqs)                # untimed warmup replay: compiles every
     warmup_s = time.perf_counter() - t0       # shape this trace touches
@@ -158,32 +185,64 @@ def run_continuous(eng: ServeEngine, reqs):
     results, report = eng.serve(reqs, stream_cb=cb)
     dt = time.perf_counter() - t0
     produced = sum(len(v) for v in results.values())
-    out = {"tokens": produced, "seconds": dt,
-           "tokens_per_s": produced / dt,
-           "slot_utilization": report["slot_utilization"],
-           "decode_steps": report["decode_steps"],
-           # wall time per engine iteration (one pooled decode step plus
-           # that iteration's admission/chunk work) — NOT isolated
-           # decode-step latency
-           "iter_ms": dt * 1e3 / max(report["decode_steps"], 1),
-           "prefill_batches": report["prefill_batches"],
-           "prefill_chunks": report["prefill_chunks"],
-           "peak_cache_bytes": report["total_bytes"],
-           "warmup_s": warmup_s,
-           **_ttft_stats(ttft)}
-    for k in ("pages_total", "page_utilization", "peak_page_utilization",
-              "page_fragmentation", "preemptions", "peak_page_bytes",
-              "prefix_hit_rate", "prefix_hits", "cow_copies",
-              "spec_steps", "spec_accept_rate", "spec_tokens_per_step",
-              "pages_freed_rollback", "pages_freed_retire",
-              # one-kernel-iteration discipline: jit calls per engine
-              # iteration (pinned at 1.0) and trace counts (the compile
-              # budget the pow2 width buckets bound)
-              "iterations", "dispatches_per_iteration",
-              "unified_compiles", "engine_compiles"):
-        if k in report:
-            out[k] = report[k]
+    out = dict(report.as_dict())
+    out.update({"tokens": produced, "seconds": dt,
+                "tokens_per_s": produced / dt,
+                # wall time per engine iteration (one pooled decode step
+                # plus that iteration's admission/chunk work) — NOT
+                # isolated decode-step latency
+                "iter_ms": dt * 1e3 / max(report["decode_steps"], 1),
+                "peak_cache_bytes": report["total_bytes"],
+                "warmup_s": warmup_s})
+    if not engine_latency:
+        out.update(_ttft_stats(ttft))
     return out
+
+
+def run_slo(model, dparams, args, cfg, max_len, max_blocks, num_pages):
+    """The traffic-layer run: replay a deterministic heavy-tailed
+    two-tenant open-loop trace through the quota fair-share policy
+    (paged + shared prefixes + SLO-adaptive chunked prefill + COW-aware
+    preemption) and report goodput under SLO."""
+    tcfg = slo_trace_config(args, cfg)
+    records = trace_lib.generate_trace(tcfg)
+    sc = ServeConfig(
+        num_slots=args.slots,
+        cache=CacheConfig(max_len=max_len, paged=True,
+                          page_size=args.page_size,
+                          max_blocks=max_blocks, num_pages=num_pages),
+        policy=PolicyConfig(kind="quota",
+                            quotas={t.name: t.weight
+                                    for t in tcfg.tenants},
+                            prefill_chunk=args.prefill_chunk,
+                            adaptive_chunk=True, cow_victims=True))
+    eng = ServeEngine(model, dparams, sc)
+    return run_continuous(eng, trace_lib.as_requests(records),
+                          engine_latency=True)
+
+
+def slo_trace_config(args, cfg) -> trace_lib.TraceConfig:
+    """The benchmark's canonical two-tenant trace: gold (3x quota
+    weight, tight SLOs, shared system prompt) vs bronze (1x, loose
+    SLOs, cold prompts), Pareto-burst arrivals."""
+    return trace_lib.TraceConfig(
+        n_requests=args.slo_requests,
+        arrival_rate=args.slo_rate,
+        heavy_tail=args.slo_heavy_tail,
+        mean_prompt=max(8, args.max_prompt // 4),
+        max_prompt=args.max_prompt,
+        mean_new=max(4, args.max_new // 4),
+        max_new=args.max_new,
+        vocab=cfg.vocab_size,
+        tenants=(
+            trace_lib.TenantSpec("gold", weight=3.0,
+                                 ttft_slo_s=args.slo_ttft,
+                                 tpot_slo_s=args.slo_tpot,
+                                 system_prompt_len=args.shared_prefix),
+            trace_lib.TenantSpec("bronze", weight=1.0,
+                                 ttft_slo_s=4 * args.slo_ttft,
+                                 tpot_slo_s=4 * args.slo_tpot)),
+        seed=args.seed)
 
 
 def main(argv=None):
@@ -214,6 +273,21 @@ def main(argv=None):
     p.add_argument("--spec-draft-layers", type=int, default=1,
                    help="depth of the layer-truncated draft (shares the "
                         "trunk's packed weights)")
+    p.add_argument("--slo-requests", type=int, default=10,
+                   help="requests in the open-loop SLO trace (0 disables "
+                        "the slo run)")
+    p.add_argument("--slo-rate", type=float, default=32.0,
+                   help="mean arrivals/second for the SLO trace")
+    p.add_argument("--slo-heavy-tail", type=float, default=1.5,
+                   help="Pareto shape for the SLO trace's inter-arrival "
+                        "bursts (must be > 1; smaller = burstier)")
+    p.add_argument("--slo-ttft", type=float, default=30.0,
+                   help="gold-tenant TTFT budget in seconds (bronze gets "
+                        "4x; generous defaults keep CPU smoke goodput "
+                        "nonzero — tighten on real hardware)")
+    p.add_argument("--slo-tpot", type=float, default=10.0,
+                   help="gold-tenant seconds-per-output-token budget "
+                        "(bronze gets 4x)")
     p.add_argument("--autotune", action="store_true",
                    help="append a tiny fused-kernel block-size/layout "
                         "sweep (benchmarks/kernel_autotune.py) to the "
@@ -240,10 +314,14 @@ def main(argv=None):
     max_blocks = -(-max_len // args.page_size)
     num_pages = max(max_blocks,
                     int(args.pages_frac * args.slots * max_blocks))
-    mk = lambda m=model, **kw: ServeEngine(m, dparams, ServeConfig(
-        max_len=max_len, num_slots=args.slots, **kw))
-    paged_kw = dict(paged=True, page_size=args.page_size,
-                    max_blocks=max_blocks, num_pages=num_pages)
+    plain_cache = CacheConfig(max_len=max_len)
+    paged_cache = CacheConfig(max_len=max_len, paged=True,
+                              page_size=args.page_size,
+                              max_blocks=max_blocks, num_pages=num_pages)
+
+    def mk(m=model, cache=plain_cache, spec=None, policy=None):
+        return ServeEngine(m, dparams, ServeConfig(
+            num_slots=args.slots, cache=cache, spec=spec, policy=policy))
     print(f"[{cfg.name}] {args.requests} requests x {args.slots} slots; "
           f"prompts {args.min_prompt}-{args.max_prompt} "
           f"(+{args.shared_prefix} shared system tokens), "
@@ -254,35 +332,45 @@ def main(argv=None):
     runs = [("static", run_static(mk(), reqs, args.slots)),
             ("continuous", run_continuous(mk(), reqs)),
             ("chunked", run_continuous(
-                mk(prefill_chunk=args.prefill_chunk), reqs)),
+                mk(policy=PolicyConfig(
+                    prefill_chunk=args.prefill_chunk)), reqs)),
             ("paged", run_continuous(
-                mk(prefix_share=False, **paged_kw), reqs)),
-            ("paged+share", run_continuous(mk(**paged_kw), reqs))]
+                mk(cache=dataclasses.replace(paged_cache,
+                                             prefix_share=False)), reqs)),
+            ("paged+share", run_continuous(mk(cache=paged_cache), reqs))]
     if args.fused:
         cfg_k = cfg.with_(binary=dataclasses.replace(cfg.binary,
                                                      paged_kernel=True))
         runs.append(("paged+fused", run_continuous(
-            mk(m=build_model(cfg_k), **paged_kw), reqs)))
+            mk(m=build_model(cfg_k), cache=paged_cache), reqs)))
     if args.spec_k > 0:
         runs.append(("paged+share+spec", run_continuous(
-            mk(spec_decode=args.spec_k,
-               spec_draft_layers=args.spec_draft_layers, **paged_kw),
+            mk(cache=paged_cache,
+               spec=SpecConfig(k=args.spec_k,
+                               draft_layers=args.spec_draft_layers)),
             reqs)))
+    if args.slo_requests > 0:
+        runs.append(("slo", run_slo(model, dparams, args, cfg, max_len,
+                                    max_blocks, num_pages)))
     for name, r in runs:
         extra = ""
-        if "page_utilization" in r:
+        if r.get("page_utilization") is not None:
             ppu = r["peak_page_utilization"] * 100
             hit = r["prefix_hit_rate"] * 100
             extra = (f"  peak-page-util {ppu:4.0f}%  "
                      f"peak pages {r['peak_page_bytes'] / 1024:6.1f} KiB  "
                      f"hit {hit:3.0f}%  cow {r['cow_copies']:.0f}  "
                      f"preempt {r['preemptions']:.0f}")
-        if "spec_accept_rate" in r:
+        if r.get("spec_accept_rate") is not None:
             extra += (f"  accept {r['spec_accept_rate'] * 100:3.0f}%  "
                       f"{r['spec_tokens_per_step']:.2f} tok/verify-step  "
                       f"rollback-frees {r['pages_freed_rollback']:.0f}")
-        step = f"  iter {r['iter_ms']:6.1f}ms" if "iter_ms" in r else ""
-        if "dispatches_per_iteration" in r:
+        if r.get("goodput_under_slo") is not None and name == "slo":
+            extra += (f"  goodput {r['goodput_under_slo']:6.1f} tok/s  "
+                      f"slo-met {r['slo_attainment'] * 100:3.0f}%")
+        step = (f"  iter {r['iter_ms']:6.1f}ms"
+                if r.get("iter_ms") is not None else "")
+        if r.get("dispatches_per_iteration") is not None:
             step += (f"  {r['dispatches_per_iteration']:.0f} disp/iter  "
                      f"{r['engine_compiles']:.0f} compiles")
         print(f"  {name:11s} {r['tokens']:5d} tok  {r['seconds']:6.2f}s "
@@ -327,8 +415,30 @@ def main(argv=None):
               f"{sp['spec_steps']:.0f} steps "
               f"(amortizes per-step weight+cache traffic by the same "
               f"factor on bandwidth-bound hardware)")
-    report = {name: {k: float(v) for k, v in r.items()}
-              for name, r in by_name.items()}
+    if "slo" in by_name:
+        sl = by_name["slo"]
+        tens = sl.get("tenants") or {}
+        per = "; ".join(
+            f"{t}: p99 ttft {v['ttft_p99_s'] * 1e3:.0f}ms, "
+            f"{v['preemptions']:.0f} preempt"
+            for t, v in sorted(tens.items())
+            if v.get("ttft_p99_s") is not None)
+        print(f"  slo trace (quota policy, heavy-tail "
+              f"{args.slo_heavy_tail}): goodput under SLO "
+              f"{sl['goodput_under_slo']:.1f} tok/s, "
+              f"{sl['slo_attainment'] * 100:.0f}% of requests in SLO "
+              f"({per})")
+
+    def jsonable(v):
+        if isinstance(v, dict):
+            return {k: jsonable(x) for k, x in v.items()}
+        if v is None or isinstance(v, (bool, str)):
+            return v
+        if isinstance(v, (list, tuple)):
+            return [jsonable(x) for x in v]
+        return float(v)
+
+    report = {name: jsonable(r) for name, r in by_name.items()}
     if args.autotune:
         import kernel_autotune
         sweep = kernel_autotune.autotune_sps(

@@ -27,7 +27,8 @@ import numpy as np
 
 from repro.configs import base
 from repro.models.lm import build_model
-from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.engine import (CacheConfig, PolicyConfig, Request,
+                                ServeConfig, ServeEngine, SpecConfig)
 
 
 def main():
@@ -73,11 +74,12 @@ def main():
     if args.paged and not paged:
         print(f"[{cfg.name}] frontend arch serves static: --paged ignored")
     eng = ServeEngine(model, dparams, ServeConfig(
-        max_len=max_len, num_slots=args.slots, paged=paged,
-        num_pages=args.num_pages or None,
-        prefill_chunk=args.prefill_chunk or None,
-        spec_decode=args.spec_k or None,
-        spec_draft_layers=args.spec_draft_layers))
+        num_slots=args.slots,
+        cache=CacheConfig(max_len=max_len, paged=paged,
+                          num_pages=args.num_pages or None),
+        policy=PolicyConfig(prefill_chunk=args.prefill_chunk or None),
+        spec=SpecConfig(k=args.spec_k or None,
+                        draft_layers=args.spec_draft_layers)))
 
     rng = np.random.default_rng(0)
     if cfg.frontend_tokens:

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.configs import base
 from repro.models.lm import build_model
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import CacheConfig, ServeConfig, ServeEngine
 
 
 def main() -> None:
@@ -39,9 +39,10 @@ def main() -> None:
     max_len = args.max_len or (args.prompt_len + args.new_tokens +
                                cfg.frontend_tokens + 8)
     eng = ServeEngine(model, dparams,
-                      ServeConfig(max_len=max_len, sampler=args.sampler,
+                      ServeConfig(sampler=args.sampler,
                                   temperature=args.temperature,
-                                  seed=args.seed))
+                                  seed=args.seed,
+                                  cache=CacheConfig(max_len=max_len)))
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)

@@ -1,12 +1,20 @@
 """Continuous-batching serving on pooled binary KV caches.
 
 Submodules:
-  engine   ServeEngine / ServeConfig / Request / Scheduler — admission,
-           pooled decode, chunked prefill, prefix sharing, speculative
-           batch-verify decode.
-  kvcache  SlotPool / PageArena bookkeeping, slot scatters, cache_report.
+  engine   ServeEngine / ServeConfig (CacheConfig + SpecConfig +
+           PolicyConfig sub-configs) / Request / SLO — admission, pooled
+           decode, chunked prefill, prefix sharing, speculative
+           batch-verify decode, SLO/goodput accounting.
+  policy   SchedulingPolicy interface + the Scheduler heap — FIFO,
+           prompt-length wave packing, per-tenant quota fair-share,
+           COW-aware preemption, SLO-adaptive chunk width.
+  trace    replayable open-loop traffic traces (Poisson / heavy-tailed
+           arrivals, tenant mixes, shared system prompts, per-request
+           SLOs) with canonical byte-deterministic JSON.
+  kvcache  SlotPool / PageArena bookkeeping, slot scatters, cache_report
+           and the typed EngineReport schema.
   sampler  greedy / temperature / top-k sampling and the rejection-
            sampling speculative acceptance rule.
 """
 
-__all__ = ["engine", "kvcache", "sampler"]
+__all__ = ["engine", "kvcache", "policy", "sampler", "trace"]

@@ -102,7 +102,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import heapq
+import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -112,23 +113,25 @@ import numpy as np
 from repro.core import packing
 from repro.models.attention import KVCache, PagedKVCache, PageSpec
 from repro.serve import kvcache, sampler as sampler_lib
+from repro.serve.policy import (PolicyConfig, Scheduler, SchedulingPolicy,
+                                _pow2_bucket, make_policy)
+
+__all__ = ["CacheConfig", "SpecConfig", "PolicyConfig", "ServeConfig",
+           "SLO", "Request", "Scheduler", "SchedulingPolicy",
+           "ServeEngine"]
 
 Params = Any
 
 
 @dataclasses.dataclass
-class ServeConfig:
-    """Engine-level serving knobs.
+class CacheConfig:
+    """KV-cache layout knobs (``ServeConfig.cache``).
 
     Attributes:
       max_len: contiguous decode ring size (>= prompt + new tokens for
         full-attention stacks; windowed stacks ring at their window).  In
         paged mode the full-attention cap is ``max_blocks * page_size``
         instead.
-      sampler / temperature / top_k / seed: token sampling policy.
-      num_slots: continuous-batching pool size (concurrent sequences).
-      eos_id: default retirement token (per-request ``Request.eos_id``
-        overrides).
       paged: replace per-slot rings with a page arena + block tables.
       page_size: tokens per page; must be a positive multiple of 32 (the
         uint32 packing word) so V^T bit-packing never straddles pages.
@@ -138,16 +141,6 @@ class ServeConfig:
       num_pages: usable pages in the shared full-capacity arena; defaults
         to ``num_slots * max_blocks`` (fully provisioned — no preemption).
         Sizing it below that is safe: exhaustion preempts, never deadlocks.
-      prefill_chunk: chunked/streamed prefill width in tokens (None =
-        whole prompts load in one unified iteration).  Must be a positive
-        multiple of 32 (the uint32 packing word, so chunk boundaries
-        never straddle a V^T word).  Prompts longer than the chunk
-        stream one chunk per engine iteration THROUGH the pooled unified
-        forward, fused with the decode rows — token-for-token identical
-        to whole-prompt prefill, but decoding slots stay live while long
-        prompts load.  All model families chunk: attention stacks resume
-        through the cache-continuation attend, recurrent families
-        (hybrid/ssm) through their carry state.
       prefix_share: paged mode only — admission hash-conses full prompt
         pages (chain hashes over the token prefix, which deterministically
         produces the page's bit-packed K/V^T words) so requests with a
@@ -156,52 +149,13 @@ class ServeConfig:
         so output stays token-for-token identical to the unshared paths.
         False keeps the PR 2 one-owner-per-page behavior (the escape
         hatch the benchmark compares against).
-      spec_decode: self-speculative decoding — k drafted tokens per slot
-        per pure-decode iteration, batch-verified in ONE pooled
-        k+1-token verify forward that reuses the chunk-prefill prefix
-        attend.  Accepted prefixes commit to the caches; rejected tails
-        are never written (rollback is exact in every layout, wrapped
-        SWA rings included) and in paged mode over-grown pages un-grow
-        back to the arena.  Greedy output is bit-identical to plain
-        decode; temperature/top_k use rejection-sampling acceptance so
-        the token distribution is provably unchanged.  None disables.
-        Attention-only stacks (recurrent families decode
-        non-speculatively).
-      spec_draft_layers: depth of the layer-truncated draft sharing the
-        trunk's packed weights (clamped to the stack depth; a full-depth
-        "draft" degenerates to the trunk itself and accepts everything).
-        Ignored when an explicit draft model is passed to ``ServeEngine``
-        — an independent small binary draft with its own params.
     """
     max_len: int = 2048
-    sampler: str = "greedy"          # greedy | temperature | top_k
-    temperature: float = 1.0
-    top_k: int = 40
-    seed: int = 0
-    num_slots: int = 4
-    eos_id: Optional[int] = None
     paged: bool = False
     page_size: int = 32
     max_blocks: Optional[int] = None
     num_pages: Optional[int] = None
-    prefill_chunk: Optional[int] = None
     prefix_share: bool = True
-    spec_decode: Optional[int] = None
-    spec_draft_layers: int = 1
-
-    def __post_init__(self):
-        if self.prefill_chunk is not None and (
-                self.prefill_chunk <= 0 or
-                self.prefill_chunk % packing.WORD):
-            raise ValueError(
-                f"prefill_chunk must be a positive multiple of the "
-                f"packing word ({packing.WORD}), got {self.prefill_chunk}")
-        if self.spec_decode is not None and self.spec_decode < 1:
-            raise ValueError(f"spec_decode must draft at least one token "
-                             f"per step, got {self.spec_decode}")
-        if self.spec_decode is not None and self.spec_draft_layers < 1:
-            raise ValueError(f"spec_draft_layers must be >= 1, got "
-                             f"{self.spec_draft_layers}")
 
     def page_spec(self) -> PageSpec:
         """Resolve the paged-cache sizing (PageSpec validates itself)."""
@@ -215,6 +169,199 @@ class ServeConfig:
 
 
 @dataclasses.dataclass
+class SpecConfig:
+    """Speculative-decode knobs (``ServeConfig.spec``).
+
+    Attributes:
+      k: self-speculative decoding — k drafted tokens per slot per
+        pure-decode iteration, batch-verified in ONE pooled k+1-token
+        verify forward that reuses the chunk-prefill prefix attend.
+        Accepted prefixes commit to the caches; rejected tails are never
+        written (rollback is exact in every layout, wrapped SWA rings
+        included) and in paged mode over-grown pages un-grow back to the
+        arena.  Greedy output is bit-identical to plain decode;
+        temperature/top_k use rejection-sampling acceptance so the token
+        distribution is provably unchanged.  None disables.
+        Attention-only stacks (recurrent families decode
+        non-speculatively).
+      draft_layers: depth of the layer-truncated draft sharing the
+        trunk's packed weights (clamped to the stack depth; a full-depth
+        "draft" degenerates to the trunk itself and accepts everything).
+        Ignored when an explicit draft model is passed to ``ServeEngine``
+        — an independent small binary draft with its own params.
+    """
+    k: Optional[int] = None
+    draft_layers: int = 1
+
+    def __post_init__(self):
+        if self.k is not None and self.k < 1:
+            raise ValueError(f"spec_decode must draft at least one token "
+                             f"per step, got {self.k}")
+        if self.k is not None and self.draft_layers < 1:
+            raise ValueError(f"spec_draft_layers must be >= 1, got "
+                             f"{self.draft_layers}")
+
+
+_FLAT_CACHE = ("max_len", "paged", "page_size", "max_blocks", "num_pages",
+               "prefix_share")
+_FLAT_SPEC = {"spec_decode": "k", "spec_draft_layers": "draft_layers"}
+_FLAT_POLICY = ("prefill_chunk",)
+
+
+class ServeConfig:
+    """Engine-level serving knobs, grouped into sub-configs.
+
+    Top-level fields are the sampling/pool knobs every run touches:
+      sampler / temperature / top_k / seed: token sampling policy
+        (sampler is one of greedy | temperature | top_k).
+      num_slots: continuous-batching pool size (concurrent sequences).
+      eos_id: default retirement token (per-request ``Request.eos_id``
+        overrides).
+
+    The rest group by subsystem:
+      cache: ``CacheConfig`` — ring/page layout, capacity, prefix
+        sharing.
+      spec: ``SpecConfig`` — speculative batch-verify decode.
+      policy: ``repro.serve.policy.PolicyConfig`` — scheduling policy,
+        chunked prefill width, SLO-adaptive chunking, tenant quotas,
+        COW-aware preemption.
+
+    Compatibility: the pre-regroup flat keywords (``max_len=``,
+    ``paged=``, ``prefill_chunk=``, ``spec_decode=``, ...) still
+    construct — they map onto the sub-configs and emit a single
+    ``DeprecationWarning`` — and read-through properties
+    (``cfg.max_len``, ``cfg.prefill_chunk``, ``cfg.spec_decode``, ...)
+    keep every old call site working unchanged.
+    """
+
+    def __init__(self, *, sampler: str = "greedy",
+                 temperature: float = 1.0, top_k: int = 40, seed: int = 0,
+                 num_slots: int = 4, eos_id: Optional[int] = None,
+                 cache: Optional[CacheConfig] = None,
+                 spec: Optional[SpecConfig] = None,
+                 policy: Optional[PolicyConfig] = None, **flat):
+        self.sampler = sampler
+        self.temperature = temperature
+        self.top_k = top_k
+        self.seed = seed
+        self.num_slots = num_slots
+        self.eos_id = eos_id
+        cache = cache if cache is not None else CacheConfig()
+        spec = spec if spec is not None else SpecConfig()
+        policy = policy if policy is not None else PolicyConfig()
+        if flat:
+            unknown = [k for k in flat if k not in _FLAT_CACHE and
+                       k not in _FLAT_SPEC and k not in _FLAT_POLICY]
+            if unknown:
+                raise TypeError(f"ServeConfig got unexpected keyword "
+                                f"arguments {sorted(unknown)}")
+            warnings.warn(
+                f"flat ServeConfig keywords {sorted(flat)} are "
+                f"deprecated: pass cache=CacheConfig(...), "
+                f"spec=SpecConfig(...) and/or policy=PolicyConfig(...)",
+                DeprecationWarning, stacklevel=2)
+            ck = {k: v for k, v in flat.items() if k in _FLAT_CACHE}
+            if ck:
+                cache = dataclasses.replace(cache, **ck)
+            sk = {_FLAT_SPEC[k]: v for k, v in flat.items()
+                  if k in _FLAT_SPEC}
+            if sk:
+                spec = dataclasses.replace(spec, **sk)
+            pk = {k: v for k, v in flat.items() if k in _FLAT_POLICY}
+            if pk:
+                policy = dataclasses.replace(policy, **pk)
+        self.cache = cache
+        self.spec = spec
+        self.policy = policy
+
+    def __repr__(self) -> str:
+        return (f"ServeConfig(sampler={self.sampler!r}, "
+                f"temperature={self.temperature}, top_k={self.top_k}, "
+                f"seed={self.seed}, num_slots={self.num_slots}, "
+                f"eos_id={self.eos_id}, cache={self.cache}, "
+                f"spec={self.spec}, policy={self.policy})")
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, ServeConfig):
+            return NotImplemented
+        return ((self.sampler, self.temperature, self.top_k, self.seed,
+                 self.num_slots, self.eos_id, self.cache, self.spec,
+                 self.policy) ==
+                (other.sampler, other.temperature, other.top_k,
+                 other.seed, other.num_slots, other.eos_id, other.cache,
+                 other.spec, other.policy))
+
+    def page_spec(self) -> PageSpec:
+        """Resolve the paged-cache sizing (PageSpec validates itself)."""
+        return self.cache.page_spec()
+
+    # -- flat read-through face (pre-regroup call sites) -------------------
+
+    @property
+    def max_len(self) -> int:
+        return self.cache.max_len
+
+    @property
+    def paged(self) -> bool:
+        return self.cache.paged
+
+    @property
+    def page_size(self) -> int:
+        return self.cache.page_size
+
+    @property
+    def max_blocks(self) -> Optional[int]:
+        return self.cache.max_blocks
+
+    @property
+    def num_pages(self) -> Optional[int]:
+        return self.cache.num_pages
+
+    @property
+    def prefix_share(self) -> bool:
+        return self.cache.prefix_share
+
+    @property
+    def prefill_chunk(self) -> Optional[int]:
+        return self.policy.prefill_chunk
+
+    @property
+    def spec_decode(self) -> Optional[int]:
+        return self.spec.k
+
+    @property
+    def spec_draft_layers(self) -> int:
+        return self.spec.draft_layers
+
+
+@dataclasses.dataclass
+class SLO:
+    """Per-request latency targets (None = unconstrained).
+
+    A finished request *meets* its SLO when its time-to-first-token and
+    mean time-per-output-token both land within budget; the engine's
+    ``goodput_under_slo`` counts only SLO-meeting requests' tokens, so
+    scheduling that starves someone shows up as lost goodput even when
+    raw throughput looks fine.
+
+    Attributes:
+      ttft_s: time-to-first-token budget, seconds from ``arrival_s``.
+      tpot_s: mean seconds per output token after the first.
+    """
+    ttft_s: Optional[float] = None
+    tpot_s: Optional[float] = None
+
+    def met(self, ttft_s: Optional[float], tpot_s: float) -> bool:
+        """Did a request with these measurements make its targets?"""
+        if self.ttft_s is not None and (ttft_s is None or
+                                        ttft_s > self.ttft_s):
+            return False
+        if self.tpot_s is not None and tpot_s > self.tpot_s:
+            return False
+        return True
+
+
+@dataclasses.dataclass
 class Request:
     """One decode request for the continuous engine.
 
@@ -225,60 +372,25 @@ class Request:
         tokens generated before a preemption still count against it.
       eos_id: retirement token; falls back to ``ServeConfig.eos_id``.
       priority: higher runs first; the LOWEST-priority slot (ties: most
-        recently admitted) is preempted when the page arena is exhausted.
+        recently admitted) is preempted when the page arena is exhausted
+        (the scheduling policy can refine the tie-break).
+      tenant: traffic-class label for quota fair-share and the per-tenant
+        report rollups; the default lumps everything into one class.
+      arrival_s: open-loop arrival offset, seconds from serve() start —
+        the request is invisible to admission until the engine clock
+        reaches it.  0.0 (the default) reproduces the closed-loop
+        everything-queued-upfront behavior exactly.
+      slo: latency targets for the goodput accounting (None = always
+        counts as met).
     """
     rid: int
     tokens: np.ndarray               # (S,) int32 prompt
     max_new_tokens: int
     eos_id: Optional[int] = None     # falls back to ServeConfig.eos_id
     priority: int = 0
-
-
-class Scheduler:
-    """Priority admission queue (FIFO within a priority class).
-
-    ``pop`` returns the highest-priority request, oldest first among ties
-    — with the default priority 0 everywhere this is plain FIFO.
-    ``requeue`` reinserts a preempted request at the head of its class so
-    it resumes before newer peers (the most recently requeued first).
-    Fairness/wave-packing policies slot in here without touching the
-    engine loop.
-
-    Implementation: a heap on ``(-priority, arrival_seq)`` — ``pop`` is
-    O(log n) instead of the old full-deque scan the engine paid on every
-    step.  ``add`` draws increasing sequence numbers (FIFO within class);
-    ``requeue`` draws decreasing ones (ahead of every queued peer, and of
-    any earlier requeue)."""
-
-    def __init__(self, requests: Sequence[Request] = ()):
-        self._heap: List[Tuple[int, int, Request]] = []
-        self._seq = 0        # add(): increasing (FIFO within class)
-        self._front = 0      # requeue(): decreasing (before peers)
-        for r in requests:
-            self.add(r)
-
-    def add(self, request: Request) -> None:
-        """Enqueue a request behind its priority-class peers."""
-        self._seq += 1
-        heapq.heappush(self._heap, (-request.priority, self._seq, request))
-
-    def requeue(self, request: Request) -> None:
-        """Reinsert a preempted request ahead of its priority-class
-        peers so it resumes before newer work."""
-        self._front -= 1
-        heapq.heappush(self._heap, (-request.priority, self._front,
-                                    request))
-
-    def pop(self) -> Request:
-        """Remove and return the next request (highest priority, FIFO
-        within the class)."""
-        return heapq.heappop(self._heap)[2]
-
-    def __len__(self) -> int:
-        return len(self._heap)
-
-    def __bool__(self) -> bool:
-        return bool(self._heap)
+    tenant: str = "default"
+    arrival_s: float = 0.0
+    slo: Optional[SLO] = None
 
 
 class _SlotState:
@@ -324,26 +436,23 @@ class _PrefillState:
         self.admit_seq = admit_seq
 
 
-def _pow2_bucket(n: int, lo: int = 16) -> int:
-    """Smallest power of two >= n (>= lo) — the unified-step width
-    buckets that bound compile count to O(log max_prompt)."""
-    b = lo
-    while b < n:
-        b <<= 1
-    return b
-
-
 class ServeEngine:
     def __init__(self, model, dparams: Params, cfg: ServeConfig,
-                 draft_model=None, draft_dparams: Optional[Params] = None):
+                 draft_model=None, draft_dparams: Optional[Params] = None,
+                 policy: Optional[SchedulingPolicy] = None):
         """``draft_model``/``draft_dparams`` optionally supply an
         INDEPENDENT speculative draft (a small BinaryConfig model with
-        its own converted params); with ``cfg.spec_decode`` set and no
+        its own converted params); with ``cfg.spec.k`` set and no
         explicit draft, a layer-truncated draft sharing the trunk's
-        packed weights is built lazily (``cfg.spec_draft_layers``)."""
+        packed weights is built lazily (``cfg.spec.draft_layers``).
+        ``policy`` optionally injects a custom ``SchedulingPolicy``
+        instance; by default each ``serve()`` call builds a fresh one
+        from ``cfg.policy`` (an injected instance is reused across
+        calls, so its fairness accounts carry over)."""
         self.model = model
         self.dparams = dparams
         self.cfg = cfg
+        self._policy_proto = policy
         if (draft_model is None) != (draft_dparams is None):
             raise ValueError("pass draft_model and draft_dparams together")
         self.draft_model = draft_model
@@ -574,7 +683,7 @@ class ServeEngine:
 
     def _generate_static(self, prompts: np.ndarray, max_new_tokens: int,
                          frontend_embeds, stream_cb
-                         ) -> Tuple[np.ndarray, Dict[str, float]]:
+                         ) -> Tuple[np.ndarray, "kvcache.EngineReport"]:
         if self.cfg.paged:
             # silently falling back to contiguous max_len rings would lose
             # the paged capacity guarantee (and wrap past max_len)
@@ -690,7 +799,7 @@ class ServeEngine:
 
     def serve(self, requests: Sequence[Request], *,
               stream_cb: Optional[Callable] = None
-              ) -> Tuple[Dict[int, np.ndarray], Dict[str, float]]:
+              ) -> Tuple[Dict[int, np.ndarray], "kvcache.EngineReport"]:
         """Run the continuous-batching loop to completion.
 
         Returns ({rid: generated tokens}, stats).  Each loop iteration:
@@ -733,10 +842,24 @@ class ServeEngine:
                     f"({r.max_new_tokens}) exceeds the cache ring "
                     f"(max_len={self.cfg.max_len}); raise ServeConfig."
                     f"max_len")
-        scheduler = Scheduler(requests)
+        policy = (self._policy_proto if self._policy_proto is not None
+                  else make_policy(self.cfg.policy))
+        for r in requests:
+            policy.add(r)
         pool = kvcache.SlotPool(max(1, min(self.cfg.num_slots,
                                            len(requests) or 1)))
         chunk = self.cfg.prefill_chunk
+        # traffic clock + per-request latency stamps: arrival is the
+        # request's open-loop offset, first/last are token emission times
+        # (both on the same serve()-relative clock), so TTFT/TPOT and the
+        # SLO/goodput rollup fall out at the end.  Keyed by rid, so the
+        # stamps survive preemption and resume.
+        t0 = time.perf_counter()
+        metrics: Dict[int, Dict[str, Optional[float]]] = {
+            r.rid: {"arrival": float(getattr(r, "arrival_s", 0.0)),
+                    "first": None, "last": None}
+            for r in requests}
+        preempt_counts: Dict[str, int] = {}
         # speculative decode rides the deferred-write verify attend,
         # which is attention-only — recurrent families decode plainly
         spec_k = self.cfg.spec_decode if (self.cfg.spec_decode and
@@ -810,6 +933,10 @@ class ServeEngine:
             pages free immediately; the prompt + tokens-so-far re-prefill
             on re-admission.  Mid-prefill slots are evictable too — their
             chunks simply recompute from the prompt on resume."""
+            victim = (states.get(slot) or inflight[slot]).request
+            tenant = getattr(victim, "tenant", "default")
+            preempt_counts[tenant] = preempt_counts.get(tenant, 0) + 1
+            policy.on_preempt(victim)
             if slot in inflight:
                 st = inflight.pop(slot)
                 pool.release(slot)
@@ -817,18 +944,25 @@ class ServeEngine:
                     arena.release(slot)
                 if st.pre:
                     resumed[st.request.rid] = list(st.pre)
-                scheduler.requeue(st.request)
+                policy.requeue(st.request)
                 return
             dst = release_slot(slot)
             resumed[dst.request.rid] = list(dst.generated)
-            scheduler.requeue(dst.request)
+            policy.requeue(dst.request)
 
         def pick_victim() -> int:
-            """Lowest priority first; most recently admitted among ties —
-            over decoding AND mid-prefill slots."""
+            """The slot minimizing ``policy.victim_key`` — default:
+            lowest priority first, most recently admitted among ties,
+            over decoding AND mid-prefill slots.  The policy sees each
+            candidate's immediately-freeable page count (sole-owner
+            pages across every arena), so ``cow_victims`` can prefer
+            evictions that actually return pages."""
             def keyf(s):
                 stt = states.get(s) or inflight[s]
-                return (stt.request.priority, -stt.admit_seq)
+                freeable = sum(a.freeable_pages(s)
+                               for a in arenas.values())
+                return policy.victim_key(stt.request, stt.admit_seq,
+                                         freeable)
             return min(list(states) + list(inflight), key=keyf)
 
         def peak() -> None:
@@ -836,19 +970,57 @@ class ServeEngine:
             peak_pages = max(peak_pages, sum(
                 a.used_pages for a in arenas.values()))
 
+        def slo_endangered() -> bool:
+            """True when any decoding row with a TPOT budget has gone
+            more than half that budget since its last token — the
+            adaptive-chunk trigger (``PolicyConfig.adaptive_chunk``)."""
+            now_s = time.perf_counter() - t0
+            for st in states.values():
+                slo = getattr(st.request, "slo", None)
+                if slo is None or slo.tpot_s is None:
+                    continue
+                last = metrics[st.request.rid]["last"]
+                if last is not None and now_s - last > 0.5 * slo.tpot_s:
+                    return True
+            return False
+
         def plan_width() -> int:
             """Unified-step chunk width this iteration: the configured
-            chunk, else the power-of-two bucket covering the longest
+            chunk (policy-adjusted — the SLO-adaptive hook may shrink
+            it), else the power-of-two bucket covering the longest
             remaining prompt (whole prompts land in one iteration and
             the compile count stays O(log max_prompt))."""
+            if chunk:
+                return policy.chunk_width(chunk, slo_endangered())
             rem = max(len(st.toks) - st.done for st in inflight.values())
-            return chunk if chunk else _pow2_bucket(rem)
+            return _pow2_bucket(rem)
 
-        while scheduler or pool.active_count:
+        def emit(st: _SlotState, tok: int) -> bool:
+            """Stamp latency metrics, credit the policy's fairness
+            accounts, stream, and record the token; True when the
+            request should retire."""
+            m = metrics[st.request.rid]
+            now_s = time.perf_counter() - t0
+            if m["first"] is None:
+                m["first"] = now_s
+            m["last"] = now_s
+            policy.on_tokens(st.request, 1)
+            if stream_cb:
+                stream_cb(st.request.rid, len(st.generated), tok)
+            return st.push(tok)
+
+        while policy or pool.active_count:
             # -- admission: host bookkeeping only, no dispatch --------------
             admitted_any = False
-            while scheduler and pool.free_count:
-                req = scheduler.pop()
+            while policy and pool.free_count:
+                now_s = time.perf_counter() - t0
+                hint = chunk
+                if not hint and inflight:
+                    hint = _pow2_bucket(max(len(st.toks) - st.done
+                                            for st in inflight.values()))
+                req = policy.pop_admissible(now_s, hint)
+                if req is None:
+                    break
                 pre = resumed.get(req.rid, [])
                 plen = len(req.tokens) + len(pre)
                 slot = pool.alloc(req.rid)
@@ -874,7 +1046,7 @@ class ServeEngine:
                     for arena in arenas.values():
                         arena.release(slot)   # drops the promises
                     pool.release(slot)
-                    scheduler.requeue(req)    # no pages yet; retry later
+                    policy.requeue(req)       # no pages yet; retry later
                     break
                 for arena in arenas.values():
                     arena.grow(slot, reserve)
@@ -882,11 +1054,21 @@ class ServeEngine:
                     [np.asarray(req.tokens, np.int32),
                      np.asarray(resumed.pop(req.rid, []), np.int32)])
                 inflight[slot] = _PrefillState(req, toks, pre, admit_seq)
+                policy.on_admit(req)
                 admit_seq += 1
                 admitted_any = True
             if admitted_any:
                 prefill_batches += 1
             if not (states or inflight):
+                # open-loop idle gap: everything queued is still in the
+                # future — sleep toward the next arrival (bounded, so an
+                # arena-exhaustion requeue retries promptly) instead of
+                # spinning the admission loop
+                nxt = policy.next_arrival_s()
+                if nxt is not None:
+                    gap = t0 + nxt - time.perf_counter()
+                    if gap > 0:
+                        time.sleep(min(gap, 0.005))
                 continue
             # -- paged growth: cover every row's writes; preempt on
             # exhaustion.  Prefill rows grow to their chunk end (+ the
@@ -896,12 +1078,18 @@ class ServeEngine:
             # diverge — prefill-chunk writes never diverge a page (they
             # write exactly the content its hash key promises), so
             # in-flight rows need neither COW nor masking.
+            # the iteration's unified width is planned ONCE and shared by
+            # paged growth and the dispatch below: the adaptive-chunk
+            # hook reads the wall clock, and growing pages for one width
+            # but dispatching another could write pages growth never
+            # covered
+            width_now = plan_width() if inflight else 0
             if arenas:
                 copies: Dict[int, List[Tuple[int, int]]] = {}
                 while states or inflight:
                     ok = True
                     dspan = span if (spec_k and not inflight) else 1
-                    width = plan_width() if inflight else 0
+                    width = width_now if inflight else 0
                     for slot in sorted(set(states) | set(inflight)):
                         if slot in inflight:
                             ist = inflight[slot]
@@ -953,7 +1141,7 @@ class ServeEngine:
             if inflight:
                 # unified mixed iteration: prefill chunks + decode rows
                 # fused in one forward (see _build_unified)
-                width = plan_width()
+                width = width_now
                 toks_buf = np.zeros((pool.num_slots, width), np.int32)
                 start_buf = np.zeros((pool.num_slots,), np.int32)
                 valid_buf = np.zeros((pool.num_slots,), np.int32)
@@ -994,9 +1182,7 @@ class ServeEngine:
                     st.cache_len += 1
                     tok = int(nxt_np[slot, 0])
                     token_buf[slot, 0] = tok
-                    if stream_cb:
-                        stream_cb(st.request.rid, len(st.generated), tok)
-                    if st.push(tok):
+                    if emit(st, tok):
                         retire(slot)
                 for slot in sorted(inflight):
                     ist = inflight[slot]
@@ -1012,9 +1198,7 @@ class ServeEngine:
                     states[slot] = sst
                     tok = int(nxt_np[slot, 0])
                     token_buf[slot, 0] = tok
-                    if stream_cb:
-                        stream_cb(ist.request.rid, len(ist.pre), tok)
-                    if sst.push(tok):
+                    if emit(sst, tok):
                         retire(slot)
             elif spec_k:
                 # pure-decode speculative iteration: draft k, verify
@@ -1044,10 +1228,7 @@ class ServeEngine:
                     st.cache_len += n + 1
                     for i in range(n + 1):
                         tok = int(out_np[slot, i])
-                        if stream_cb:
-                            stream_cb(st.request.rid, len(st.generated),
-                                      tok)
-                        if st.push(tok):
+                        if emit(st, tok):
                             retire(slot)
                             break
                 # speculative rollback, arena side: pages grown for the
@@ -1072,9 +1253,7 @@ class ServeEngine:
                     st = states[slot]
                     st.cache_len += 1
                     tok = int(toks[slot, 0])
-                    if stream_cb:
-                        stream_cb(st.request.rid, len(st.generated), tok)
-                    if st.push(tok):
+                    if emit(st, tok):
                         retire(slot)
 
         report = kvcache.cache_report(
@@ -1090,16 +1269,16 @@ class ServeEngine:
             spec_accepted=spec_accepted, spec_slot_steps=spec_slot_steps,
             iterations=iterations, dispatches=dispatches,
             compiles=dict(self._compiles))
-        report["prefill_batches"] = float(prefill_batches)
-        report["prefill_chunks"] = float(prefill_chunks)
-        report["requests"] = float(len(requests))
-        report["spec_steps"] = float(spec_steps)
+        report.prefill_batches = float(prefill_batches)
+        report.prefill_chunks = float(prefill_chunks)
+        report.requests = float(len(requests))
+        report.spec_steps = float(spec_steps)
+        report.preemptions = float(preemptions)
         if spec:
-            report["preemptions"] = float(preemptions)
             # cache_report sums per-arena peaks, which can land on
             # different steps; replace with the per-step simultaneous
             # peak the loop actually observed
-            report["peak_page_utilization"] = (
+            report.peak_page_utilization = (
                 peak_pages / max(sum(a.num_pages
                                      for a in arenas.values()), 1))
             # peak bytes of pages actually mapped (per-arena peaks x that
@@ -1114,5 +1293,46 @@ class ServeEngine:
                 per_page = 4 * (int(np.prod(pg.k_pages.shape[1:])) +
                                 int(np.prod(pg.vt_pages.shape[1:])))
                 pb += arenas[ring].peak_pages * per_page
-            report["peak_page_bytes"] = float(pb)
+            report.peak_page_bytes = float(pb)
+        # -- traffic rollup: SLO attainment, goodput, per-tenant latency ----
+        elapsed_s = max(time.perf_counter() - t0, 1e-9)
+        good_tokens = 0
+        slo_met = 0
+        tstats: Dict[str, Dict[str, Any]] = {}
+        for r in requests:
+            m = metrics[r.rid]
+            n = len(results.get(r.rid, ()))
+            ttft = (m["first"] - m["arrival"]
+                    if m["first"] is not None else None)
+            tpot = ((m["last"] - m["first"]) / (n - 1)) if n > 1 else 0.0
+            slo = getattr(r, "slo", None)
+            ok = slo is None or slo.met(ttft, tpot)
+            if ok:
+                slo_met += 1
+                good_tokens += n
+            t = tstats.setdefault(getattr(r, "tenant", "default"), {
+                "requests": 0.0, "tokens": 0.0, "slo_met": 0.0,
+                "preemptions": 0.0, "_ttfts": []})
+            t["requests"] += 1.0
+            t["tokens"] += float(n)
+            t["slo_met"] += 1.0 if ok else 0.0
+            if ttft is not None:
+                t["_ttfts"].append(ttft)
+        all_ttfts: List[float] = []
+        for tenant, t in tstats.items():
+            t["preemptions"] = float(preempt_counts.get(tenant, 0))
+            arr = t.pop("_ttfts")
+            all_ttfts.extend(arr)
+            t["ttft_p50_s"] = (float(np.percentile(arr, 50))
+                               if arr else None)
+            t["ttft_p99_s"] = (float(np.percentile(arr, 99))
+                               if arr else None)
+        report.elapsed_s = float(elapsed_s)
+        report.goodput_under_slo = good_tokens / elapsed_s
+        report.slo_attainment = slo_met / max(len(requests), 1)
+        report.ttft_p50_s = (float(np.percentile(all_ttfts, 50))
+                             if all_ttfts else None)
+        report.ttft_p99_s = (float(np.percentile(all_ttfts, 99))
+                             if all_ttfts else None)
+        report.tenants = tstats
         return results, report

@@ -16,7 +16,8 @@ sharing collapses N copies of a common system prompt into one).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import dataclasses
+from typing import (Any, Dict, Iterator, List, Optional, Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +56,136 @@ def bf16_equivalent_bytes(caches: Caches) -> int:
     return total
 
 
+@dataclasses.dataclass
+class EngineReport:
+    """Typed serving report — the stable metric schema.
+
+    Every metric the engine (or ``cache_report``) can produce is a named
+    field; a field is ``None`` when its feature did not run (e.g. the
+    spec group without speculative decode).  ``as_dict()`` returns the
+    FULL schema with those ``None``s intact, so JSON consumers always
+    see every key and never KeyError across configs.
+
+    Dict compatibility: the report also answers the old untyped-dict
+    face — ``report["key"]``, ``"key" in report``, ``.get`` / ``.keys``
+    / ``.items`` — with ``None`` fields behaving as ABSENT keys, exactly
+    like the conditionally-present keys of the pre-typed dict (so
+    ``"spec_accept_rate" in report`` is still False when spec decode was
+    off).  New code should read attributes.
+
+    Field groups (see ``cache_report`` for the semantics):
+      memory      total_bytes .. compression_vs_bf16 (always set)
+      slots       slots_total .. slot_utilization
+      pages       pages_total .. pages_freed_rollback, peak_page_bytes
+      spec        spec_drafted .. spec_tokens_per_step, spec_steps
+      engine      iterations .. engine_compiles, prefill_batches,
+                  prefill_chunks, requests, preemptions
+      traffic     elapsed_s, goodput_under_slo (SLO-meeting requests'
+                  tokens per second), slo_attainment (fraction of
+                  requests meeting their SLO; no-SLO requests count as
+                  met), ttft_p50_s / ttft_p99_s, tenants (per-tenant
+                  rollup: requests, tokens, slo_met, preemptions,
+                  ttft_p50_s, ttft_p99_s)
+    """
+    # memory (always set)
+    total_bytes: float = 0.0
+    bytes_per_token: float = 0.0
+    bf16_equivalent_bytes: float = 0.0
+    compression_vs_bf16: float = 0.0
+    # slot pool
+    slots_total: Optional[float] = None
+    slots_active: Optional[float] = None
+    occupancy: Optional[float] = None
+    mean_slot_len: Optional[float] = None
+    max_slot_len: Optional[float] = None
+    decode_steps: Optional[float] = None
+    slot_utilization: Optional[float] = None
+    # page arena
+    pages_total: Optional[float] = None
+    pages_used: Optional[float] = None
+    pages_free: Optional[float] = None
+    page_utilization: Optional[float] = None
+    peak_page_utilization: Optional[float] = None
+    page_fragmentation: Optional[float] = None
+    pages_reserved: Optional[float] = None
+    pages_shared: Optional[float] = None
+    prefix_lookups: Optional[float] = None
+    prefix_hits: Optional[float] = None
+    prefix_hit_rate: Optional[float] = None
+    cow_copies: Optional[float] = None
+    pages_freed_retire: Optional[float] = None
+    pages_freed_rollback: Optional[float] = None
+    peak_page_bytes: Optional[float] = None
+    # speculative decode
+    spec_drafted: Optional[float] = None
+    spec_accepted: Optional[float] = None
+    spec_accept_rate: Optional[float] = None
+    spec_tokens_per_step: Optional[float] = None
+    spec_steps: Optional[float] = None
+    # engine loop
+    iterations: Optional[float] = None
+    dispatches_per_iteration: Optional[float] = None
+    unified_compiles: Optional[float] = None
+    engine_compiles: Optional[float] = None
+    prefill_batches: Optional[float] = None
+    prefill_chunks: Optional[float] = None
+    requests: Optional[float] = None
+    preemptions: Optional[float] = None
+    # traffic / SLO
+    elapsed_s: Optional[float] = None
+    goodput_under_slo: Optional[float] = None
+    slo_attainment: Optional[float] = None
+    ttft_p50_s: Optional[float] = None
+    ttft_p99_s: Optional[float] = None
+    tenants: Optional[Dict[str, Dict[str, Any]]] = None
+
+    @classmethod
+    def field_names(cls) -> Tuple[str, ...]:
+        """The full stable schema, in declaration order."""
+        return tuple(f.name for f in dataclasses.fields(cls))
+
+    def as_dict(self) -> Dict[str, Any]:
+        """Full schema with nulls: EVERY field, ``None`` where the
+        feature was off — the JSON face (downstream guards and diffs
+        never KeyError across configs)."""
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    # -- untyped-dict compatibility face (None == absent) -------------------
+
+    def __getitem__(self, key: str) -> Any:
+        if key not in type(self).field_names():
+            raise KeyError(key)
+        val = getattr(self, key)
+        if val is None:
+            raise KeyError(key)
+        return val
+
+    def __setitem__(self, key: str, val: Any) -> None:
+        if key not in type(self).field_names():
+            raise KeyError(key)
+        setattr(self, key, val)
+
+    def __contains__(self, key: object) -> bool:
+        return (key in type(self).field_names() and
+                getattr(self, key) is not None)
+
+    def get(self, key: str, default: Any = None) -> Any:
+        val = (getattr(self, key)
+               if key in type(self).field_names() else None)
+        return default if val is None else val
+
+    def keys(self) -> List[str]:
+        return [k for k in type(self).field_names()
+                if getattr(self, k) is not None]
+
+    def items(self) -> Iterator[Tuple[str, Any]]:
+        return ((k, getattr(self, k)) for k in self.keys())
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.keys())
+
+
 def cache_report(caches: Caches, *, seq_len: int, batch: int,
                  slot_lengths: Optional[Sequence[int]] = None,
                  active: Optional[Sequence[bool]] = None,
@@ -64,7 +195,7 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
                  spec_accepted: int = 0, spec_slot_steps: int = 0,
                  iterations: Optional[int] = None, dispatches: int = 0,
                  compiles: Optional[Dict[str, int]] = None
-                 ) -> Dict[str, float]:
+                 ) -> EngineReport:
     """Memory + (optionally) per-slot occupancy/utilization stats.
 
     Args:
@@ -76,7 +207,7 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
       arenas: page arenas backing the pool (paged mode); adds
         occupancy/fragmentation stats aggregated over every arena.
 
-    Returns a flat dict of floats:
+    Returns an ``EngineReport`` (typed; also answers the old dict face):
       total_bytes, bytes_per_token, bf16_equivalent_bytes,
       compression_vs_bf16; with slot_lengths also slots_total,
       slots_active, occupancy, mean_slot_len, max_slot_len, decode_steps,
@@ -109,10 +240,11 @@ def cache_report(caches: Caches, *, seq_len: int, batch: int,
     total = cache_bytes(caches)
     per_tok = total / max(seq_len * batch, 1)
     bf16 = bf16_equivalent_bytes(caches)
-    report = {"total_bytes": float(total),
-              "bytes_per_token": float(per_tok),
-              "bf16_equivalent_bytes": float(bf16),
-              "compression_vs_bf16": float(bf16) / max(total, 1)}
+    report = EngineReport(
+        total_bytes=float(total),
+        bytes_per_token=float(per_tok),
+        bf16_equivalent_bytes=float(bf16),
+        compression_vs_bf16=float(bf16) / max(total, 1))
     if slot_lengths is not None:
         lens = np.asarray(slot_lengths, np.int64)
         act = (np.asarray(active, bool) if active is not None
@@ -419,6 +551,17 @@ class PageArena:
 
     def refcount(self, page: int) -> int:
         return int(self._ref[page])
+
+    def freeable_pages(self, slot: int) -> int:
+        """Pages that would return to the free list if ``slot`` released
+        right now — its sole-owner (refcount 1) pages.  Shared prefix
+        pages stay with their other readers, so a slot riding a popular
+        system prompt frees almost nothing when evicted; COW-aware
+        preemption (``PolicyConfig.cow_victims``) uses this to prefer
+        victims whose eviction actually relieves arena pressure."""
+        n = int(self._counts[slot])
+        return sum(1 for lp in range(n)
+                   if self._ref[int(self.block_tables[slot, lp])] == 1)
 
     def page_key(self, page: int) -> Optional[bytes]:
         """The hash-cons key registered for ``page`` (None if none)."""

@@ -10,6 +10,7 @@ import numpy as np
 
 from _hypothesis_compat import given, settings, strategies as st
 from repro.serve.engine import Request, Scheduler
+from repro.serve.policy import PolicyConfig, make_policy
 
 
 class _DequeScheduler:
@@ -137,3 +138,137 @@ def test_scheduler_fifo_within_class_and_requeue_front():
     s.requeue(_req(11, 1))
     s.requeue(_req(12, 1))
     assert [s.pop().rid for _ in range(3)] == [12, 11, 10]
+
+
+# ---------------------------------------------------------------------------
+# quota policy: deficit fair-share vs a pure-python oracle
+# ---------------------------------------------------------------------------
+
+_TENANTS = ("gold", "silver", "bronze")
+_WEIGHTS = {"gold": 3.0, "silver": 1.5}       # bronze defaults to 1.0
+
+
+class _FairShareOracle:
+    """Reference deficit fair-share: a flat list of (seq, rid, tenant,
+    priority) entries; pop takes the highest-priority class, then the
+    entry minimizing (served_tokens / weight, seq) — the same arithmetic
+    QuotaPolicy performs, reimplemented with no heap."""
+
+    def __init__(self, quotas):
+        self.quotas = dict(quotas)
+        self.served = {}
+        self.q = []
+        self._seq = 0
+        self._front = 0
+
+    def add(self, r):
+        self._seq += 1
+        self.q.append((self._seq, r.rid, r.tenant, r.priority))
+
+    def requeue(self, r):
+        self._front -= 1
+        self.q.append((self._front, r.rid, r.tenant, r.priority))
+
+    def deficit(self, tenant):
+        w = float(self.quotas.get(tenant, 1.0))
+        return self.served.get(tenant, 0) / w
+
+    def grant(self, tenant, n):
+        self.served[tenant] = self.served.get(tenant, 0) + n
+
+    def pop(self):
+        top = max(e[3] for e in self.q)
+        pick = min((e for e in self.q if e[3] == top),
+                   key=lambda e: (self.deficit(e[2]), e[0]))
+        self.q.remove(pick)
+        return pick[1]
+
+    def __len__(self):
+        return len(self.q)
+
+
+def _treq(rid, tenant, priority=0):
+    return Request(rid=rid, tokens=np.ones((1,), np.int32),
+                   max_new_tokens=1, priority=priority, tenant=tenant)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3))
+@settings(max_examples=int(os.environ.get("REPRO_FUZZ_EXAMPLES", "0"))
+          or 40, deadline=None)
+def test_quota_policy_matches_fairness_oracle(seed, n_prios):
+    """Random interleavings of add / requeue / grant / pop: QuotaPolicy's
+    admission order must match the linear-scan fairness oracle exactly —
+    priority classes outrank deficits, deficits order within the class,
+    FIFO (requeues first) breaks deficit ties."""
+    rng = np.random.default_rng(seed)
+    pol = make_policy(PolicyConfig(kind="quota", quotas=dict(_WEIGHTS)))
+    ref = _FairShareOracle(_WEIGHTS)
+    popped = []
+    next_rid = 0
+    for _ in range(80):
+        op = rng.random()
+        if op < 0.4 or (len(ref) == 0 and not popped):
+            r = _treq(next_rid, _TENANTS[int(rng.integers(3))],
+                      int(rng.integers(0, n_prios)))
+            next_rid += 1
+            pol.add(r)
+            ref.add(r)
+        elif op < 0.55 and popped:
+            r = popped.pop(int(rng.integers(len(popped))))
+            pol.requeue(r)
+            ref.requeue(r)
+        elif op < 0.7 and popped:
+            # stream some tokens for a running request — the fairness
+            # account moves even while nothing is queued
+            r = popped[int(rng.integers(len(popped)))]
+            n = int(rng.integers(1, 9))
+            pol.on_tokens(r, n)
+            ref.grant(r.tenant, n)
+        elif len(ref):
+            got = pol.pop_admissible(now_s=0.0)
+            want = ref.pop()
+            assert got.rid == want, (got.rid, want)
+            popped.append(got)
+        assert len(pol) == len(ref)
+    while len(ref):
+        assert pol.pop_admissible(0.0).rid == ref.pop()
+
+
+def test_quota_grants_converge_to_weight_shares():
+    """Keep every tenant's queue non-empty and grant equal-sized token
+    batches: admissions must converge to the weight proportions
+    (3 : 1.5 : 1 here) — the defining fair-share property."""
+    pol = make_policy(PolicyConfig(kind="quota", quotas=dict(_WEIGHTS)))
+    rid = 0
+    for t in _TENANTS:
+        pol.add(_treq(rid, t))
+        rid += 1
+    grants = {t: 0 for t in _TENANTS}
+    for _ in range(440):
+        r = pol.pop_admissible(0.0)
+        pol.on_tokens(r, 8)
+        grants[r.tenant] += 1
+        pol.add(_treq(rid, r.tenant))    # keep the tenant backlogged
+        rid += 1
+    total = sum(grants.values())
+    wsum = 3.0 + 1.5 + 1.0
+    for t, w in (("gold", 3.0), ("silver", 1.5), ("bronze", 1.0)):
+        assert abs(grants[t] / total - w / wsum) < 0.03, (t, grants)
+
+
+def test_quota_idle_tenant_cedes_share_without_banking():
+    """A tenant with no queued work cedes its slots; when it returns it
+    does NOT get a compensating burst (deficit counts served tokens, not
+    wall-clock) — only the normal lowest-deficit preference."""
+    pol = make_policy(PolicyConfig(kind="quota",
+                                   quotas={"a": 1.0, "b": 1.0}))
+    pol.add(_treq(0, "a"))
+    r = pol.pop_admissible(0.0)
+    pol.on_tokens(r, 100)               # tenant a far ahead on tokens
+    pol.add(_treq(1, "a"))
+    pol.add(_treq(2, "b"))
+    assert pol.pop_admissible(0.0).tenant == "b"    # b underserved
+    pol.on_tokens(_treq(2, "b"), 100)
+    # shares level -> FIFO breaks the tie
+    pol.add(_treq(3, "b"))
+    assert pol.pop_admissible(0.0).rid == 1

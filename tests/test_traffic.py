@@ -1,0 +1,260 @@
+"""The SLO-aware traffic layer end to end: replayable traces (byte
+determinism, arrival gating), policy hooks (wave packing, adaptive
+chunk, COW-aware victim choice) and the engine's goodput/SLO rollup —
+the parts of the serve path that exist so multi-tenant traffic under
+bursty arrivals degrades by POLICY instead of by accident."""
+import functools
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.models.lm import build_model
+from repro.serve import kvcache, trace
+from repro.serve.engine import (SLO, CacheConfig, PolicyConfig, Request,
+                                ServeConfig, ServeEngine)
+from repro.serve.policy import make_policy
+
+TWO_TENANTS = (
+    trace.TenantSpec("gold", weight=3.0, ttft_slo_s=30.0, tpot_slo_s=10.0,
+                     system_prompt_len=32),
+    trace.TenantSpec("bronze", weight=1.0, ttft_slo_s=60.0),
+)
+
+
+@functools.lru_cache(maxsize=None)
+def _build():
+    cfg = base.get_smoke_config("smollm-135m")
+    model = build_model(cfg)
+    dparams = model.convert(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, dparams
+
+
+# ---------------------------------------------------------------------------
+# trace generator
+# ---------------------------------------------------------------------------
+
+def test_trace_same_seed_byte_identical():
+    cfg = trace.TraceConfig(n_requests=24, arrival_rate=16.0,
+                            heavy_tail=1.5, tenants=TWO_TENANTS, seed=7)
+    a = trace.to_json(trace.generate_trace(cfg))
+    b = trace.to_json(trace.generate_trace(cfg))
+    assert a == b
+    # canonical form survives a parse/serialize round trip byte-for-byte
+    assert trace.to_json(trace.from_json(a)) == a
+
+
+def test_trace_seed_and_shape_move_the_bytes():
+    mk = lambda **kw: trace.to_json(trace.generate_trace(
+        trace.TraceConfig(n_requests=16, tenants=TWO_TENANTS, **kw)))
+    assert mk(seed=0) != mk(seed=1)
+    assert mk(seed=0) != mk(seed=0, heavy_tail=1.2)
+
+
+def test_trace_records_are_well_formed():
+    cfg = trace.TraceConfig(n_requests=40, arrival_rate=32.0,
+                            heavy_tail=1.5, max_prompt=64, max_new=16,
+                            tenants=TWO_TENANTS, seed=3)
+    recs = trace.generate_trace(cfg)
+    assert len(recs) == 40
+    assert recs[0]["arrival_s"] == 0.0          # trace opens at t=0
+    arr = [r["arrival_s"] for r in recs]
+    assert arr == sorted(arr)
+    assert {r["tenant"] for r in recs} <= {"gold", "bronze"}
+    gold = [r for r in recs if r["tenant"] == "gold"]
+    assert gold, "weight-3 tenant drew no requests in 40"
+    # every gold prompt opens with the SAME 32-token system prefix
+    # (one variant configured), and carries the tenant's SLO
+    heads = {tuple(r["prompt"][:32]) for r in gold}
+    assert len(heads) == 1
+    assert all(r["ttft_slo_s"] == 30.0 and r["tpot_slo_s"] == 10.0
+               for r in gold)
+    for r in recs:
+        assert 1 <= len(r["prompt"]) <= 64 + 32
+        assert 1 <= r["max_new_tokens"] <= 16
+
+
+def test_as_requests_stamps_tenant_arrival_slo():
+    recs = trace.generate_trace(trace.TraceConfig(
+        n_requests=6, tenants=TWO_TENANTS, seed=1))
+    reqs = trace.as_requests(recs)
+    for rec, r in zip(recs, reqs):
+        assert isinstance(r, Request) and r.rid == rec["rid"]
+        assert r.tenant == rec["tenant"]
+        assert r.arrival_s == rec["arrival_s"]
+        assert r.tokens.tolist() == rec["prompt"]
+        if rec["ttft_slo_s"] is not None:
+            assert r.slo.ttft_s == rec["ttft_slo_s"]
+    # bronze has no tpot SLO -> met() only checks ttft
+    b = next(r for r in reqs if r.tenant == "bronze")
+    assert b.slo.met(ttft_s=59.0, tpot_s=1e9)
+    assert not b.slo.met(ttft_s=61.0, tpot_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# policy hooks (no engine)
+# ---------------------------------------------------------------------------
+
+def _req(rid, plen=8, tenant="default", arrival_s=0.0, priority=0):
+    return Request(rid=rid, tokens=np.ones((plen,), np.int32),
+                   max_new_tokens=1, priority=priority, tenant=tenant,
+                   arrival_s=arrival_s)
+
+
+def test_arrival_gates_admission():
+    pol = make_policy(PolicyConfig())
+    pol.add(_req(0, arrival_s=5.0))
+    pol.add(_req(1, arrival_s=1.0))
+    assert pol.pop_admissible(now_s=0.5) is None    # nothing arrived
+    assert len(pol) == 2                            # gate didn't drop them
+    assert pol.next_arrival_s() == 1.0
+    assert pol.pop_admissible(now_s=2.0).rid == 1
+    assert pol.pop_admissible(now_s=2.0) is None    # rid 0 still future
+    assert pol.pop_admissible(now_s=5.0).rid == 0
+
+
+def test_arrival_gate_preserves_priority_and_requeue_order():
+    pol = make_policy(PolicyConfig())
+    pol.add(_req(0, priority=0))
+    pol.add(_req(1, priority=1, arrival_s=9.0))     # high prio, not here
+    pol.add(_req(2, priority=0))
+    assert pol.pop_admissible(0.0).rid == 0         # 1 invisible until 9
+    pol.requeue(_req(3, priority=0))
+    assert pol.pop_admissible(0.0).rid == 3         # requeue still first
+    assert pol.pop_admissible(99.0).rid == 1        # now the high prio
+
+
+def test_wave_packing_prefers_fitting_bucket():
+    pol = make_policy(PolicyConfig(kind="wave"))
+    pol.add(_req(0, plen=100))      # bucket 128
+    pol.add(_req(1, plen=20))       # bucket 32
+    # a 32-wide wave is already planned: the short prompt rides it
+    assert pol.pop_admissible(0.0, width_hint=32).rid == 1
+    # nothing fits 32 now -> FIFO fallback admits the long prompt
+    assert pol.pop_admissible(0.0, width_hint=32).rid == 0
+    pol.add(_req(2, plen=100))
+    pol.add(_req(3, plen=20))
+    # no hint (nothing in flight) -> plain FIFO
+    assert pol.pop_admissible(0.0, width_hint=None).rid == 2
+
+
+def test_adaptive_chunk_shrinks_only_when_endangered():
+    pol = make_policy(PolicyConfig(prefill_chunk=128, adaptive_chunk=True,
+                                   min_chunk=32))
+    assert pol.chunk_width(128, endangered=False) == 128
+    assert pol.chunk_width(128, endangered=True) == 32
+    # without the flag the width never moves
+    fifo = make_policy(PolicyConfig(prefill_chunk=128))
+    assert fifo.chunk_width(128, endangered=True) == 128
+    with pytest.raises(ValueError):
+        PolicyConfig(adaptive_chunk=True)           # needs a chunk
+    with pytest.raises(ValueError):
+        PolicyConfig(prefill_chunk=128, adaptive_chunk=True, min_chunk=33)
+
+
+def test_cow_victim_key_prefers_freeable_slots():
+    base_pol = make_policy(PolicyConfig())
+    cow = make_policy(PolicyConfig(cow_victims=True))
+    a, b = _req(0), _req(1)
+    # default: priority then most-recent admission; refcounts ignored
+    assert (base_pol.victim_key(a, admit_seq=1, freeable_pages=0) <
+            base_pol.victim_key(b, admit_seq=0, freeable_pages=9))
+    # cow_victims: the slot freeing more sole-owner pages goes first
+    assert (cow.victim_key(b, admit_seq=0, freeable_pages=9) <
+            cow.victim_key(a, admit_seq=1, freeable_pages=0))
+    # priority still outranks freeable pages
+    hi = _req(2, priority=1)
+    assert (cow.victim_key(a, 1, 0) < cow.victim_key(hi, 0, 99))
+
+
+def test_arena_freeable_pages_counts_sole_owner_only():
+    arena = kvcache.PageArena(num_pages=6, page_size=32, num_slots=2,
+                              num_blocks=3, ring_len=96)
+    assert arena.grow(0, 64) and arena.grow(1, 32)
+    assert arena.freeable_pages(0) == 2          # all pages sole-owner
+    assert arena.freeable_pages(1) == 1
+    arena.release(0)
+    arena.release(1)
+    # shared prefix page: the sharer's eviction would free NOTHING of it
+    arena.set_prefix_keys(0, [b"sys"], 32)
+    assert arena.grow(0, 64)                     # registers b"sys"
+    arena.set_prefix_keys(1, [b"sys"], 32)
+    assert arena.grow(1, 32)                     # adopts slot 0's page
+    assert arena.shared_pages == 1
+    assert arena.freeable_pages(0) == 1          # only its private page
+    assert arena.freeable_pages(1) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: goodput / SLO rollup, preemption counts
+# ---------------------------------------------------------------------------
+
+def _serve(reqs, **cfg_kw):
+    _, model, dparams = _build()
+    eng = ServeEngine(model, dparams, ServeConfig(**cfg_kw))
+    return eng.serve(reqs)
+
+
+def test_engine_reports_goodput_and_tenant_rollup():
+    tcfg = trace.TraceConfig(
+        n_requests=6, arrival_rate=1000.0, mean_prompt=8, max_prompt=16,
+        mean_new=3, max_new=4, vocab=_build()[0].vocab_size,
+        tenants=TWO_TENANTS, seed=5)
+    reqs = trace.as_requests(trace.generate_trace(tcfg))
+    out, report = _serve(reqs, num_slots=2,
+                         cache=CacheConfig(max_len=64),
+                         policy=PolicyConfig(
+                             kind="quota",
+                             quotas={"gold": 3.0, "bronze": 1.0}))
+    assert len(out) == 6
+    assert report["elapsed_s"] > 0
+    # 30s/60s TTFT budgets on a 6-request smoke trace: everything meets
+    # SLO, so goodput == total tokens / elapsed and attainment is 1.0
+    total = sum(len(v) for v in out.values())
+    assert report["slo_attainment"] == 1.0
+    assert report["goodput_under_slo"] == pytest.approx(
+        total / report["elapsed_s"])
+    assert report["ttft_p99_s"] >= report["ttft_p50_s"] > 0
+    tenants = report["tenants"]
+    assert set(tenants) == {t.name for t in TWO_TENANTS
+                            if any(r.tenant == t.name for r in reqs)}
+    assert sum(ts["requests"] for ts in tenants.values()) == 6
+    assert sum(ts["tokens"] for ts in tenants.values()) == total
+    for ts in tenants.values():
+        assert ts["slo_met"] == ts["requests"]
+        assert ts["ttft_p99_s"] >= ts["ttft_p50_s"] > 0
+        assert ts["preemptions"] == 0
+    # full-schema contract: the typed report serializes with EVERY field
+    d = report.as_dict()
+    assert set(d) == set(kvcache.EngineReport.field_names())
+    json.dumps(d)                                   # nulls serialize
+
+
+def test_engine_counts_preemptions_per_tenant():
+    vocab = _build()[0].vocab_size
+    rng = np.random.default_rng(0)
+    # 33-token prompts with 40-token budgets outgrow 2 pages mid-decode
+    # while both slots are resident — the tight 4-page arena must preempt
+    reqs = [Request(rid=i, tokens=rng.integers(0, vocab, 33, np.int64)
+                    .astype(np.int32), max_new_tokens=40,
+                    tenant=("a" if i % 2 else "b"))
+            for i in range(4)]
+    out, report = _serve(
+        reqs, num_slots=2,
+        cache=CacheConfig(max_len=96, paged=True, page_size=32,
+                          max_blocks=3, num_pages=4),
+        policy=PolicyConfig(cow_victims=True))
+    assert len(out) == 4
+    assert all(len(v) == 40 for v in out.values())
+    assert report["preemptions"] >= 1.0
+    per_tenant = sum(ts["preemptions"]
+                     for ts in report["tenants"].values())
+    assert per_tenant == report["preemptions"]
+
+
+def test_unconstrained_requests_always_meet_slo():
+    assert SLO().met(ttft_s=1e9, tpot_s=1e9)
+    r = _req(0)
+    assert r.slo is None and r.tenant == "default"
